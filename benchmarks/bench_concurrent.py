@@ -1,0 +1,27 @@
+"""Paper Fig. 14: concurrent mixed-workflow serving — latency when queries
+are randomly interleaved across all five workflow types."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import WORKFLOW_NAMES, emit, fixture, load_requests, make_server
+
+
+def run(quick: bool = True) -> None:
+    index, embedder = fixture()
+    n = 30 if quick else 100
+    rate = 6.0
+    for mode in ["sequential", "async", "hedra"]:
+        s = make_server(index, embedder, mode,
+                        hot_cache=12 if mode == "hedra" else 0)
+        load_requests(s, n, rate, names=WORKFLOW_NAMES, seed=7)
+        m = s.run()
+        summ = m.summary()
+        # per-workflow latency breakdown
+        per = {}
+        for req in s.sched.done:
+            per.setdefault(req.graph.name, []).append(req.finish_us - req.arrival_us)
+        breakdown = "_".join(
+            f"{k}={np.mean(v)/1e3:.0f}ms" for k, v in sorted(per.items()))
+        emit(f"concurrent_{mode}", summ["avg_latency_ms"] * 1e3,
+             f"p95_ms={summ['p95_latency_ms']:.1f}_{breakdown}")

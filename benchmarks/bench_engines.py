@@ -1,0 +1,69 @@
+"""Paper Fig. 4 + Fig. 6: execution-pattern divergence of the two engines.
+
+(a) generation: step latency vs continuous batch size (real tiny-model
+    measurements) — near-flat curve, token-level batching amortises;
+(b) retrieval: cluster-search throughput vs batch size (real numpy/BLAS) —
+    throughput grows with batch;
+(c) workload variation: decode-step and single-cluster latency distributions.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, fixture
+
+
+def run(quick: bool = True) -> None:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.serving.engine import GenerationEngine
+
+    index, embedder = fixture()
+
+    # (a) generation step latency vs batch
+    cfg = get_config("qwen3-1.7b").reduced(d_model=128, d_ff=256, n_layers=4,
+                                           segments=get_config("qwen3-1.7b").reduced().segments * 4)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    for batch in ([1, 4, 8] if quick else [1, 2, 4, 8, 16]):
+        eng = GenerationEngine(cfg, params, max_batch=batch, max_len=128, eos_id=-1)
+        for b in range(batch):
+            eng.add_sequence(np.arange(12) % 200 + 1, max_new=10_000)
+        eng.step()  # compile
+        t0 = time.perf_counter()
+        n = 20
+        for _ in range(n):
+            eng.step()
+        dt = (time.perf_counter() - t0) / n * 1e6
+        emit(f"gen_step_batch{batch}", dt, f"tok_per_s={batch/dt*1e6:.0f}")
+
+    # (b) retrieval throughput vs batch (queries per cluster scan)
+    rng = np.random.default_rng(0)
+    cid = int(np.argmax(index.cluster_sizes()))
+    for batch in ([1, 8, 64] if quick else [1, 4, 16, 64, 256]):
+        q = rng.standard_normal((batch, index.dim)).astype(np.float32)
+        index.search_cluster(q, cid)  # warm
+        t0 = time.perf_counter()
+        n = 30
+        for _ in range(n):
+            index.search_cluster(q, cid)
+        dt = (time.perf_counter() - t0) / n * 1e6
+        emit(f"ret_cluster_batch{batch}", dt,
+             f"queries_per_s={batch/dt*1e6:.0f}")
+
+    # (c) workload variation distributions
+    sizes = index.cluster_sizes()
+    times = []
+    for c in rng.choice(index.n_clusters, 32, replace=False):
+        q = rng.standard_normal((1, index.dim)).astype(np.float32)
+        t0 = time.perf_counter()
+        index.search_cluster(q, int(c))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times = np.array(times)
+    emit("ret_cluster_latency_p50", float(np.percentile(times, 50)),
+         f"p95={np.percentile(times,95):.1f}us_cv={times.std()/times.mean():.2f}")
+    emit("cluster_size_skew", float(sizes.mean()),
+         f"min={sizes.min()}_max={sizes.max()}_cv={sizes.std()/sizes.mean():.2f}")

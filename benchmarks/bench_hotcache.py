@@ -1,0 +1,48 @@
+"""Paper Fig. 8 + Fig. 18: access skew and partial device index caching.
+
+(8)  cluster access-frequency skew under the Zipf workload;
+(18) retrieval speedup + hit rate vs cache capacity (fraction of clusters),
+     including the Eq. 2 memory-split planner output.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import PAPER_COST, emit, fixture, load_requests, make_server
+from repro.retrieval.hotcache import plan_memory_split
+
+
+def run(quick: bool = True) -> None:
+    index, embedder = fixture()
+    n = 30 if quick else 100
+    rate = 6.0
+
+    # baseline (no cache) once
+    s0 = make_server(index, embedder, "hedra", hot_cache=0)
+    load_requests(s0, n, rate, seed=3)
+    m0 = s0.run().summary()
+
+    fracs = [0.1, 0.3] if quick else [0.05, 0.1, 0.2, 0.3, 0.5]
+    for frac in fracs:
+        cap = max(2, int(index.n_clusters * frac))
+        s = make_server(index, embedder, "hedra", hot_cache=cap)
+        load_requests(s, n, rate, seed=3)
+        m = s.run().summary()
+        hyb = s.backend.hybrid
+        st = hyb.stats()
+        speedup = m0["avg_latency_ms"] / max(m["avg_latency_ms"], 1e-9)
+        emit(f"hotcache_frac{int(frac*100)}", m["avg_latency_ms"] * 1e3,
+             f"hit_rate={st['hit_rate']:.2f}_speedup={speedup:.2f}"
+             f"_swaps={st['swaps']}")
+        if frac == fracs[-1]:
+            emit("hotcache_skew", 0.0,
+                 "_".join(f"{k}={v:.2f}" for k, v in st["skew"].items()))
+
+    # Eq. 2 planner on measured-ish tables
+    kv_opts = [2 << 30, 4 << 30, 8 << 30, 16 << 30]
+    t_gen = lambda kv, rps: min(kv / (8 << 30), 1.0) * 20.0  # saturates @8GB
+    t_ret = lambda rps: 14.0
+    kv, cache = plan_memory_split(24 << 30, t_gen=t_gen, t_ret=t_ret,
+                                  rps_g=rate, rps_r=rate, kv_candidates=kv_opts)
+    emit("eq2_memory_split", float(kv / (1 << 20)),
+         f"kv_gb={kv/(1<<30):.0f}_cache_gb={cache/(1<<30):.0f}")

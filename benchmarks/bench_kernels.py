@@ -1,0 +1,63 @@
+"""Kernel-level benchmark: fused IVF scan + decode attention.
+
+Wall-clock numbers time the jitted jnp oracle on this CPU (the executable
+proxy); the derived column reports the kernel's arithmetic intensity and the
+TPU-v5e roofline time so the §Perf analysis can compare implementations.
+Pallas kernels themselves are validated in interpret mode (tests/).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.analysis.hlo import HBM_BW, PEAK_FLOPS_BF16
+
+
+def _time(f, *args, n=10):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else None
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = f(*args)
+        jax.tree.map(lambda x: x.block_until_ready(), r)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(quick: bool = True) -> None:
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.ivf_scan.ops import ivf_scan
+
+    rng = np.random.default_rng(0)
+
+    for (G, QB, d, C, L, k) in ([(8, 8, 256, 16, 1024, 10)] if quick else
+                                [(8, 8, 256, 16, 1024, 10),
+                                 (32, 8, 1024, 64, 2048, 20)]):
+        q = jnp.asarray(rng.standard_normal((G, QB, d)), jnp.float32)
+        slab = jnp.asarray(rng.standard_normal((C, L, d)), jnp.float32)
+        valid = jnp.full((C,), L, jnp.int32)
+        gc = jnp.asarray(rng.integers(0, C, size=(G,)), jnp.int32)
+        us = _time(lambda: ivf_scan(q, gc, slab, valid, k, impl="ref"), n=5)
+        flops = 2.0 * G * QB * L * d
+        bytes_ = (G * QB * d + G * L * d) * 4 + G * QB * k * 8
+        ai = flops / bytes_
+        t_tpu = max(flops / PEAK_FLOPS_BF16, bytes_ / HBM_BW) * 1e6
+        emit(f"ivf_scan_G{G}_L{L}_d{d}", us,
+             f"ai={ai:.1f}_tpu_roofline_us={t_tpu:.1f}")
+
+    for (B, H, KV, dh, S) in ([(8, 16, 8, 128, 4096)] if quick else
+                              [(8, 16, 8, 128, 4096),
+                               (32, 16, 8, 128, 32768)]):
+        q = jnp.asarray(rng.standard_normal((B, H, dh)), jnp.bfloat16)
+        kc = jnp.asarray(rng.standard_normal((B, S, KV, dh)), jnp.bfloat16)
+        vc = jnp.asarray(rng.standard_normal((B, S, KV, dh)), jnp.bfloat16)
+        lengths = jnp.full((B,), S, jnp.int32)
+        us = _time(lambda: decode_attention(q, kc, vc, lengths, impl="ref"), n=5)
+        flops = 4.0 * B * H * S * dh
+        bytes_ = 2.0 * B * S * KV * dh * 2 + B * H * dh * 2 * 2
+        ai = flops / bytes_
+        t_tpu = max(flops / PEAK_FLOPS_BF16, bytes_ / HBM_BW) * 1e6
+        emit(f"decode_attn_B{B}_S{S}", us,
+             f"ai={ai:.2f}_tpu_roofline_us={t_tpu:.1f}_memory_bound={ai < 240}")

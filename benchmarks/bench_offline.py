@@ -1,0 +1,24 @@
+"""Paper Fig. 13: offline batch execution — total runtime per framework mode,
+normalized to HedraRAG (all requests present at t=0)."""
+from __future__ import annotations
+
+from benchmarks.common import WORKFLOW_NAMES, emit, fixture, make_server
+from repro import workflows
+
+
+def run(quick: bool = True) -> None:
+    index, embedder = fixture()
+    n = 24 if quick else 96
+    flows = ["one-shot", "multistep"] if quick else WORKFLOW_NAMES
+    for wf in flows:
+        totals = {}
+        for mode in ["sequential", "async", "hedra"]:
+            s = make_server(index, embedder, mode,
+                            hot_cache=12 if mode == "hedra" else 0)
+            for i in range(n):
+                s.add_request(f"q{i}", workflows.build(wf), arrival_us=0.0)
+            m = s.run()
+            totals[mode] = m.sim_time_us
+        base = totals["hedra"]
+        for mode, t in totals.items():
+            emit(f"offline_{wf}_{mode}", t, f"normalized={t/base:.2f}x")

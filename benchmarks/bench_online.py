@@ -1,0 +1,23 @@
+"""Paper Fig. 12: online serving — request latency vs arrival rate across
+the five RAG workflows, HedraRAG vs LangChain-like vs FlashRAG-like."""
+from __future__ import annotations
+
+from benchmarks.common import WORKFLOW_NAMES, emit, fixture, load_requests, make_server
+
+
+def run(quick: bool = True) -> None:
+    index, embedder = fixture()
+    rates = [2.0, 6.0] if quick else [1.0, 2.0, 4.0, 8.0, 12.0]
+    n = 20 if quick else 60
+    flows = ["one-shot", "irg"] if quick else WORKFLOW_NAMES
+    for wf in flows:
+        for rate in rates:
+            for mode in ["sequential", "async", "hedra"]:
+                s = make_server(index, embedder, mode, hot_cache=12 if mode == "hedra" else 0)
+                load_requests(s, n, rate, names=[wf], seed=4)
+                m = s.run().summary()
+                emit(f"online_{wf}_{mode}_rate{rate:g}",
+                     m["avg_latency_ms"] * 1e3,
+                     f"p95_ms={m['p95_latency_ms']:.1f}"
+                     f"_rps={m['throughput_rps']:.2f}"
+                     f"_slo_viol={m['slo_violations']}")

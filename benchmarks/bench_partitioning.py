@@ -1,0 +1,25 @@
+"""Paper Fig. 5 + Fig. 16: fine-grained sub-stage partitioning vs coarse
+stages — retrieval latency as a function of request rate.
+
+Compares the three pipeline strategies of Fig. 5 on a retrieval-heavy
+workload: (a) sequential coarse stages, (b) naive async coarse stages,
+(c) HedraRAG dynamic sub-stage partitioning (Eq. 1 time budget).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, fixture, load_requests, make_server
+
+
+def run(quick: bool = True) -> None:
+    index, embedder = fixture()
+    rates = [2.0, 6.0] if quick else [1.0, 2.0, 4.0, 8.0, 12.0]
+    n = 24 if quick else 80
+    for rate in rates:
+        for mode in ["sequential", "async", "hedra"]:
+            s = make_server(index, embedder, mode, nprobe=24)
+            load_requests(s, n, rate, names=["one-shot"], seed=2)
+            m = s.run().summary()
+            emit(f"partition_{mode}_rate{rate:g}",
+                 m["avg_latency_ms"] * 1e3,
+                 f"p95_ms={m['p95_latency_ms']:.1f}_rsub={m['substages_ret']}"
+                 f"_ret_util={m['ret_util']:.2f}")

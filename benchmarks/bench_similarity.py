@@ -1,0 +1,89 @@
+"""Paper Fig. 7 + Fig. 9: intra-request semantic similarity and what the
+locality observations buy.
+
+(7a) distance of consecutive retrieval queries vs query-to-top-k distances;
+(7b) partial-generation embedding distance vs prefix ratio;
+(9a) fraction of (v, v') pairs satisfying O1/O2/O3;
+(9b) effective search reduction from reordering + lossless early termination.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, fixture
+from repro.core.similarity import (
+    LocalCache,
+    observation_stats,
+    patience_termination,
+    reorder_clusters,
+)
+from repro.retrieval.ivf import TopK
+
+
+def run(quick: bool = True) -> None:
+    index, embedder = fixture()
+    n = 24 if quick else 100
+
+    # (7a) inter-retrieval similarity
+    d_consec, d_topk = [], []
+    for rid in range(n):
+        q0 = embedder.embed_query(rid, 0)
+        q1 = embedder.embed_query(rid, 1)
+        d_consec.append(np.linalg.norm(q1 - q0))
+        D, _ = index.search(q0[None], nprobe=16, k=5)
+        d_topk.append(np.sqrt(max(D[0][-1], 0)))
+    emit("sim_query_drift", float(np.mean(d_consec) * 1e3),
+         f"top5_dist_x1e3={np.mean(d_topk)*1e3:.1f}_ratio={np.mean(d_consec)/np.mean(d_topk):.2f}")
+
+    # (7b) partial-generation convergence
+    for ratio in [0.22, 0.5, 0.8]:
+        ds = [np.linalg.norm(embedder.embed_partial(r, 0, ratio)
+                             - embedder.embed_query(r, 0)) for r in range(n)]
+        emit(f"sim_partial_ratio{int(ratio*100)}", float(np.mean(ds) * 1e3),
+             f"vs_top1_dist_x1e3={np.mean(d_topk)*1e3:.1f}")
+
+    # (9a) locality observations
+    o = {"o1": 0, "o2": 0, "o3": 0}
+    for rid in range(n):
+        st = observation_stats(index, embedder.embed_query(rid, 0),
+                               embedder.embed_query(rid, 1),
+                               k=1, k_prime=20, nprobe=16)
+        for k in o:
+            o[k] += st[k]
+    emit("sim_obs_rates", 0.0,
+         f"o1={o['o1']/n:.2f}_o2={o['o2']/n:.2f}_o3={o['o3']/n:.2f}")
+
+    # (9b) reorder -> earlier ANNS termination; recall cost measured
+    searched_base, searched_reord, recalls = [], [], []
+    for rid in range(n):
+        q0 = embedder.embed_query(rid, 0)
+        q1 = embedder.embed_query(rid, 1)
+        D0, I0 = index.search(q0[None], nprobe=16, k=20)
+        cache = LocalCache()
+        cache.update(q0, TopK(20, D0[0].astype(np.float32), I0[0]), index,
+                     probed=list(index.probe_order(q0[None], 16)[0]))
+        Dfull, Ifull = index.search(q1[None], nprobe=16, k=5)
+        for reorder in (False, True):
+            probes = [int(c) for c in index.probe_order(q1[None], 16)[0]]
+            if reorder:
+                probes = reorder_clusters(probes, cache).order
+            tk = TopK.empty(5)
+            cnt, no_imp, last_kth = 0, 0, np.inf
+            while probes:
+                cid = probes.pop(0)
+                d, ids = index.search_cluster(q1[None], cid)
+                tk = tk.merge(d[0], ids[0])
+                cnt += 1
+                if tk.kth < last_kth - 1e-12:
+                    no_imp, last_kth = 0, tk.kth
+                else:
+                    no_imp += 1
+                if patience_termination(no_imp, cnt, 5, patience=4):
+                    break
+            (searched_reord if reorder else searched_base).append(cnt)
+            if reorder:
+                recalls.append(len(set(tk.ids) & set(Ifull[0])) / 5)
+    base, reord = np.mean(searched_base), np.mean(searched_reord)
+    emit("sim_reorder_clusters_searched", reord * 1e3,
+         f"baseline={base:.1f}_reduction={100*(1-reord/max(base,1e-9)):.0f}pct"
+         f"_recall_vs_full={np.mean(recalls):.3f}")

@@ -1,0 +1,32 @@
+"""Paper Fig. 17: speculation accuracy + latency across speculation policies
+(HedraRAG adaptive vs RaLMSpec-like always-on vs PipeRAG/RAGCache-like
+conservative), at two load points."""
+from __future__ import annotations
+
+from benchmarks.common import emit, fixture, load_requests, make_server
+from repro.core.speculation import SpeculationPolicy
+from repro.core.wavefront import SchedulerConfig
+
+
+def run(quick: bool = True) -> None:
+    index, embedder = fixture()
+    n = 24 if quick else 80
+    for rate in ([3.0] if quick else [3.0, 8.0]):
+        results = {}
+        for policy in ["off", "pipeline", "ralmspec", "hedra"]:
+            cfg = SchedulerConfig.preset(
+                "hedra", speculation=SpeculationPolicy(mode=policy))
+            s = make_server(index, embedder, "hedra", config=cfg)
+            load_requests(s, n, rate, names=["irg", "multistep"], seed=8)
+            m = s.run()
+            summ = m.summary()
+            att = summ["spec_gen_attempts"]
+            acc = summ["spec_gen_validated"] / att if att else 1.0
+            results[policy] = summ["avg_latency_ms"]
+            emit(f"spec_{policy}_rate{rate:g}", summ["avg_latency_ms"] * 1e3,
+                 f"accuracy={acc:.2f}_attempts={att}"
+                 f"_rollbacks={summ['spec_gen_rollbacks']}")
+        if "off" in results:
+            emit(f"spec_speedup_rate{rate:g}", 0.0,
+                 f"hedra_vs_off={results['off']/max(results['hedra'],1e-9):.2f}x"
+                 f"_vs_ralmspec={results['ralmspec']/max(results['hedra'],1e-9):.2f}x")

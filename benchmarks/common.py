@@ -1,0 +1,77 @@
+"""Shared benchmark fixtures: corpus, index, embedder, server builders.
+
+The retrieval cost model is calibrated to emulate the paper's regime
+(38M-doc Wikipedia, IVF4096, nprobe 128-512: retrieval stages ~10-80 ms,
+comparable to generation) while executing exactly on a smaller corpus —
+parameters are printed with every run so numbers are interpretable.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.backends import SimBackend  # noqa: E402
+from repro.core.wavefront import SchedulerConfig  # noqa: E402
+from repro.retrieval import (  # noqa: E402
+    CorpusConfig,
+    HybridRetrievalEngine,
+    IVFIndex,
+    SyntheticEmbedder,
+    make_corpus,
+)
+from repro.retrieval.ivf import ClusterCostModel  # noqa: E402
+from repro.server import Server  # noqa: E402
+from repro.serving.workload import poisson_arrivals  # noqa: E402
+from repro import workflows  # noqa: E402
+
+# paper-regime emulation: ~300-vector clusters at 8 us/vector -> ~2.5 ms per
+# cluster, nprobe 16 -> ~40 ms retrieval stages (between the paper's nprobe
+# 128 and 512 operating points when scaled by corpus ratio)
+PAPER_COST = ClusterCostModel(fixed_us=150.0, per_vector_us=8.0, per_query_us=2.0)
+
+WORKFLOW_NAMES = ["one-shot", "multistep", "irg", "hyde", "recomp"]
+
+
+@functools.lru_cache(maxsize=2)
+def fixture(n_docs: int = 30_000, dim: int = 64, n_topics: int = 192,
+            n_clusters: int = 96, zipf: float = 1.25, seed: int = 0):
+    docs, doc_topic, topics = make_corpus(CorpusConfig(
+        n_docs=n_docs, dim=dim, n_topics=n_topics, zipf_alpha=zipf,
+        doc_noise=0.16, seed=seed))
+    index = IVFIndex.build(docs, n_clusters, iters=5)
+    # drift tuned so the O1/O2/O3 rates land near the paper's Fig. 9a regime
+    embedder = SyntheticEmbedder(topics, zipf_alpha=zipf, inter_drift=0.42,
+                                 query_noise=0.32)
+    return index, embedder
+
+
+def make_server(index, embedder, mode: str, *, hot_cache: int = 0,
+                nprobe: int = 16, config: SchedulerConfig | None = None,
+                seed: int = 0, **kw) -> Server:
+    hybrid = None
+    if hot_cache:
+        hybrid = HybridRetrievalEngine(index, cache_capacity=hot_cache,
+                                       update_interval=25, transit_substages=1,
+                                       kernel_impl="ref")
+    be = SimBackend(index, embedder, hybrid=hybrid, cost_model=PAPER_COST,
+                    seed=seed)
+    if config is not None:
+        return Server(index, embedder, backend=be, config=config)
+    return Server(index, embedder, mode=mode, backend=be, nprobe=nprobe, **kw)
+
+
+def load_requests(server: Server, n: int, rate: float, names=None, seed: int = 1):
+    names = names or WORKFLOW_NAMES
+    arr = poisson_arrivals(rate, n, seed=seed)
+    for i, t in enumerate(arr):
+        server.add_request(f"q{i}", workflows.build(names[i % len(names)]),
+                           arrival_us=t)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` widens sweeps;
+``--only <name>`` runs a single module.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+MODULES = [
+    ("engines", "benchmarks.bench_engines"),          # Fig. 4 / 6
+    ("partitioning", "benchmarks.bench_partitioning"),  # Fig. 5 / 16
+    ("similarity", "benchmarks.bench_similarity"),    # Fig. 7 / 9
+    ("hotcache", "benchmarks.bench_hotcache"),        # Fig. 8 / 18
+    ("online", "benchmarks.bench_online"),            # Fig. 12
+    ("offline", "benchmarks.bench_offline"),          # Fig. 13
+    ("concurrent", "benchmarks.bench_concurrent"),    # Fig. 14
+    ("speculation", "benchmarks.bench_speculation"),  # Fig. 17
+    ("kernels", "benchmarks.bench_kernels"),          # roofline kernels
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    import importlib
+
+    for name, mod in MODULES:
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        m = importlib.import_module(mod)
+        m.run(quick=not args.full)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

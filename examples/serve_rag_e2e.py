@@ -1,0 +1,85 @@
+"""End-to-end REAL-execution driver: a tiny JAX LM served with continuous
+batching + real IVF retrieval through the HedraRAG scheduler (wall-clock).
+
+Everything actually executes: prompts are tokenised (toy byte tokenizer),
+the GenerationEngine decodes real tokens from a randomly-initialised reduced
+qwen3 model, retrieval runs against the IVF index with the hot-cluster cache
+(jnp kernel-ref path), and the wavefront scheduler coordinates both.
+
+Run:  PYTHONPATH=src python examples/serve_rag_e2e.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.backends import RealBackend
+from repro.models import lm
+from repro.retrieval import (
+    CorpusConfig,
+    HybridRetrievalEngine,
+    IVFIndex,
+    SyntheticEmbedder,
+    make_corpus,
+)
+from repro.server import Server
+from repro.serving.engine import GenerationEngine
+from repro import workflows
+
+
+def tokenize(text: str, vocab: int) -> np.ndarray:
+    return (np.frombuffer(text.encode(), dtype=np.uint8).astype(np.int32)
+            % (vocab - 2)) + 1
+
+
+def main() -> None:
+    docs, _, topics = make_corpus(CorpusConfig(n_docs=8_000, dim=48,
+                                               n_topics=64))
+    index = IVFIndex.build(docs, n_clusters=32, iters=4)
+    embedder = SyntheticEmbedder(topics)
+    hybrid = HybridRetrievalEngine(index, cache_capacity=8, update_interval=10,
+                                   kernel_impl="ref")
+
+    cfg = get_config("qwen3-1.7b").reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    engine = GenerationEngine(cfg, params, max_batch=8, max_len=192, eos_id=0)
+
+    backend = RealBackend(engine, index, embedder, hybrid=hybrid)
+
+    # bind engine sequences to scheduler generation stages: the scheduler's
+    # sub-stage calls engine.step_batch; sequences are admitted on stage start
+    orig_gen_duration = backend.gen_duration
+
+    def gen_duration(n_prefill_tokens, batch, n_steps):
+        while engine.can_admit() and _pending_prompts:
+            prompt = _pending_prompts.pop(0)
+            engine.add_sequence(tokenize(prompt, cfg.vocab_size), max_new=24)
+        return orig_gen_duration(n_prefill_tokens, batch, n_steps)
+
+    backend.gen_duration = gen_duration
+    _pending_prompts: list[str] = []
+
+    server = Server(index, embedder, mode="hedra", backend=backend, nprobe=8)
+    queries = [f"what is retrieval augmented generation {i}?" for i in range(8)]
+    for i, q in enumerate(queries):
+        _pending_prompts.append(q)
+        server.add_request(q, workflows.build("one-shot" if i % 2 else "hyde"),
+                           arrival_us=i * 30_000.0)
+
+    t0 = time.perf_counter()
+    metrics = server.run()
+    wall = time.perf_counter() - t0
+    print("== real-execution RAG serving ==")
+    print(f"wall time: {wall:.2f}s; engine generated real tokens via JAX decode")
+    for k, v in metrics.summary().items():
+        print(f"  {k:24s} {v}")
+    print("hot-cache stats:", hybrid.stats())
+
+
+if __name__ == "__main__":
+    main()

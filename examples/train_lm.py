@@ -1,0 +1,70 @@
+"""Training driver example: train a ~20M-param qwen3-family model for a few
+hundred steps on the synthetic token stream, with checkpoint/restart.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.models import lm
+from repro.training.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.training.data import SyntheticTokenStream
+from repro.training.optimizer import OptConfig, init_opt_state
+from repro.training.train_step import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_example")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config("qwen3-1.7b").reduced(
+        d_model=256, d_ff=1024, n_heads=8, d_head=32, vocab_size=2048,
+        n_layers=4,
+        segments=tuple(
+            s for s in get_config("qwen3-1.7b").reduced().segments
+        ) * 4,
+    )
+    shape = ShapeConfig("example", seq_len=128, global_batch=8, kind="train")
+    print(f"model: {cfg.param_count()/1e6:.1f}M params")
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    start = 0
+    if args.resume and latest_step(args.ckpt_dir) is not None:
+        start, state, _ = restore_checkpoint(
+            args.ckpt_dir, like={"params": params, "opt": opt})
+        params, opt = state["params"], state["opt"]
+        print(f"resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(cfg, OptConfig(lr=1e-3, warmup_steps=20,
+                                                     total_steps=args.steps)))
+    ds = SyntheticTokenStream(cfg, shape)
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: np.asarray(v) for k, v in ds.batch_at(step).items()}
+        loss, params, opt, stats = step_fn(params, opt, batch)
+        if step % 20 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(loss):.4f} "
+                  f"lr {float(stats['lr']):.2e} "
+                  f"gnorm {float(stats['grad_norm']):.2f} "
+                  f"({(time.time()-t0):.1f}s)")
+        if step and step % 100 == 0:
+            save_checkpoint(args.ckpt_dir, step, {"params": params, "opt": opt})
+    save_checkpoint(args.ckpt_dir, args.steps, {"params": params, "opt": opt})
+    print("done; checkpoint saved")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Hillclimb profiler: compile one cell's depth variant and print the top
+collective ops with sizes and jax op_name provenance."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import re
+import sys
+from collections import Counter
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis.hlo import _shape_bytes  # noqa: E402
+from repro.configs import ARCH_IDS, SHAPES_BY_NAME, get_config  # noqa: E402
+from repro.launch import specs as S  # noqa: E402
+from repro.launch.dryrun import _lower_compile  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", required=True, choices=list(SHAPES_BY_NAME))
+    ap.add_argument("--layout", default="tp", choices=["tp","serve_tp","dp_only"])
+    ap.add_argument("--full", action="store_true",
+                    help="compile the full scanned model instead of depth-1")
+    ap.add_argument("--top", type=int, default=14)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = SHAPES_BY_NAME[args.shape]
+    var = cfg if args.full else S.depth_variant(cfg, None, shape)
+    mesh = make_production_mesh()
+    _, comp = _lower_compile(var, shape, mesh, layout=args.layout)
+    txt = comp.as_text()
+    sizes = Counter()
+    for line in txt.splitlines():
+        s = line.strip()
+        m = re.search(
+            r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+            r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+            r"(?:-start)?\(", s)
+        if m:
+            meta = re.search(r'op_name="([^"]*)"', s)
+            key = (m.group(2), m.group(1).split("{")[0][:44],
+                   (meta.group(1)[:90] if meta else "?"))
+            sizes[key] += 1
+    rows = sorted(sizes.items(), key=lambda kv: -_shape_bytes(kv[0][1]) * kv[1])
+    total = sum(_shape_bytes(k[1]) * c for k, c in sizes.items())
+    print(f"total collective operand bytes (1-layer module): {total/1e9:.3f} GB")
+    for (op, shp, name), c in rows[: args.top]:
+        print(f"{c:3d}x {_shape_bytes(shp)/1e6:9.1f}MB {op:18s} {shp:46s} {name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""HLO-level analysis: collective bytes, cost extraction, roofline terms.
+
+Facts this module is built around (verified on this jax/XLA build):
+
+* ``compiled.cost_analysis()`` reports **per-device** FLOPs/bytes of the
+  SPMD-partitioned module, and counts while-loop bodies **once** (no trip
+  multiplication) — hence the depth-extrapolation scheme in dryrun.py.
+* collective instructions in ``compiled.as_text()`` reference operands by
+  name only, so operand byte-sizes are resolved through a full instruction
+  shape table built from the module text.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# %name = dtype[d0,d1]{layout} — also matches scalar dtype[]
+_DEF_RE = re.compile(r"%([\w\.\-]+)\s*=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\])")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict
+    count_by_op: dict
+    f32_bytes: float = 0.0  # portion of total carried by f32 buffers
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def bf16_corrected_bytes(self) -> float:
+        """XLA:CPU float-normalizes bf16 buffers to f32 (no bf16 arithmetic
+        on CPU); on TPU the same collectives run in bf16.  Corrected total
+        halves the f32 portion — documented in EXPERIMENTS.md §Roofline."""
+        other = self.total_bytes - self.f32_bytes
+        return other + 0.5 * self.f32_bytes
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+    def merged(self, other: "CollectiveStats", scale: float = 1.0) -> "CollectiveStats":
+        b = dict(self.bytes_by_op)
+        c = dict(self.count_by_op)
+        for k, v in other.bytes_by_op.items():
+            b[k] = b.get(k, 0) + v * scale
+        for k, v in other.count_by_op.items():
+            c[k] = c.get(k, 0) + v * scale
+        return CollectiveStats(b, c, self.f32_bytes + scale * other.f32_bytes)
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective op in the module (per device)."""
+    # build instruction shape table
+    shapes: dict[str, int] = {}
+    for m in _DEF_RE.finditer(hlo_text):
+        shapes[m.group(1)] = _shape_bytes(m.group(2))
+
+    bytes_by_op: dict[str, int] = {}
+    count_by_op: dict[str, int] = {}
+    f32_bytes = 0.0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        for op in COLLECTIVE_OPS:
+            # match "= ... op(" or "= op-start(" variants
+            m = re.search(rf"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{{[^}}]*\}})?))\s*{op}(?:-start)?\(([^)]*)\)", s)
+            if m is None:
+                continue
+            operands = _OPERAND_RE.findall(m.group(2))
+            b = sum(shapes.get(o, 0) for o in operands)
+            if b == 0:
+                # fall back to result size (all-reduce: result == operand)
+                b = _shape_bytes(m.group(1))
+            bytes_by_op[op] = bytes_by_op.get(op, 0) + b
+            count_by_op[op] = count_by_op.get(op, 0) + 1
+            if "f32[" in m.group(1) or "f32[" in m.group(2):
+                f32_bytes += b
+            break
+    return CollectiveStats(bytes_by_op, count_by_op, f32_bytes)
+
+
+@dataclasses.dataclass
+class CompiledCosts:
+    flops_per_device: float
+    bytes_per_device: float
+    collectives: CollectiveStats
+
+    def scaled_sub(self, other: "CompiledCosts") -> "CompiledCosts":
+        """self - other (slope computation)."""
+        coll = CollectiveStats(
+            {k: self.collectives.bytes_by_op.get(k, 0) - other.collectives.bytes_by_op.get(k, 0)
+             for k in set(self.collectives.bytes_by_op) | set(other.collectives.bytes_by_op)},
+            {k: self.collectives.count_by_op.get(k, 0) - other.collectives.count_by_op.get(k, 0)
+             for k in set(self.collectives.count_by_op) | set(other.collectives.count_by_op)},
+            self.collectives.f32_bytes - other.collectives.f32_bytes,
+        )
+        return CompiledCosts(
+            self.flops_per_device - other.flops_per_device,
+            self.bytes_per_device - other.bytes_per_device,
+            coll,
+        )
+
+    def plus_scaled(self, other: "CompiledCosts", n: float) -> "CompiledCosts":
+        coll = self.collectives.merged(other.collectives, n)
+        return CompiledCosts(
+            self.flops_per_device + n * other.flops_per_device,
+            self.bytes_per_device + n * other.bytes_per_device,
+            coll,
+        )
+
+
+def extract_costs(compiled) -> CompiledCosts:
+    ca = compiled.cost_analysis()
+    return CompiledCosts(
+        flops_per_device=float(ca.get("flops", 0.0)),
+        bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+        collectives=collective_stats(compiled.as_text()),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Roofline (TPU v5e constants from the assignment)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+def roofline_terms(costs: CompiledCosts, chips: int) -> dict:
+    """Three terms in seconds (per step).  cost_analysis is per-device, so
+    `flops/(chips*peak)` from the spec == `flops_per_device/peak`."""
+    t_compute = costs.flops_per_device / PEAK_FLOPS_BF16
+    t_memory = costs.bytes_per_device / HBM_BW
+    t_collective = costs.collectives.bf16_corrected_bytes / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_collective),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "flops_per_device": costs.flops_per_device,
+        "bytes_per_device": costs.bytes_per_device,
+        "collective_bytes_per_device": costs.collectives.bf16_corrected_bytes,
+        "collective_bytes_raw_f32normalized": costs.collectives.total_bytes,
+        "collective_counts": costs.collectives.count_by_op,
+        "collective_bytes_by_op": costs.collectives.bytes_by_op,
+    }
+
+
+def model_flops(cfg, shape, chips: int) -> dict:
+    """Analytic MODEL_FLOPS: 6·N·D for train, 2·N·D for inference steps
+    (N = active params, D = tokens processed by the step)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mf = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mf = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        mf = 2.0 * n_active * tokens
+    return {"model_flops_global": mf, "model_flops_per_device": mf / chips,
+            "active_params": n_active, "total_params": cfg.param_count()}

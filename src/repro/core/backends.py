@@ -1,0 +1,163 @@
+"""Execution backends for the wavefront scheduler.
+
+``SimBackend`` — *exact results, modelled time*: retrieval work is executed
+for real against the IVF index (and the hot-cache hybrid path, so cache hit
+rates and result contents are genuine), but the scheduler is *charged*
+calibrated-model durations.  This is how scheduling policies are compared
+honestly on a single-CPU container: the paper's CPU∥GPU overlap becomes two
+modelled resources with measured cost curves (Fig. 4/6 shapes), while every
+search result, cache decision, reorder and speculation validation is real.
+
+``RealBackend`` — wall-clock everything: ties the same scheduler to the JAX
+generation engine (serving/engine.py) and the hybrid retrieval engine;
+used by the end-to-end examples and integration tests.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.retrieval.hybrid import HybridRetrievalEngine
+from repro.retrieval.ivf import ClusterCostModel, IVFIndex, TopK
+
+
+class SimBackend:
+    def __init__(
+        self,
+        index: IVFIndex,
+        embedder,
+        *,
+        hybrid: Optional[HybridRetrievalEngine] = None,
+        cost_model: Optional[ClusterCostModel] = None,
+        # generation cost curve (Fig. 4a shape): step(batch) = a + b*batch
+        gen_step_base_us: float = 1200.0,
+        gen_step_per_seq_us: float = 35.0,
+        prefill_us_per_token: float = 8.0,
+        gen_noise_sigma: float = 0.20,  # decode-step variation (Fig. 6a)
+        # device (hot-cache) search: per-vector speedup + kernel launch cost
+        device_speedup: float = 8.0,
+        device_launch_us: float = 60.0,
+        # fault injection
+        straggler_prob: float = 0.0,
+        straggler_factor: float = 4.0,
+        seed: int = 0,
+    ):
+        self.index = index
+        self.embedder = embedder
+        self.hybrid = hybrid
+        self.cluster_cost_model = cost_model or ClusterCostModel()
+        self.gen_step_base_us = gen_step_base_us
+        self.gen_step_per_seq_us = gen_step_per_seq_us
+        self.prefill_us_per_token = prefill_us_per_token
+        self.gen_noise_sigma = gen_noise_sigma
+        self.device_speedup = device_speedup
+        self.device_launch_us = device_launch_us
+        self.straggler_prob = straggler_prob
+        self.straggler_factor = straggler_factor
+        self._rng = np.random.default_rng(seed)
+        self._sizes = index.cluster_sizes()
+
+    # ----------------------------------------------------------- embeddings
+    def query_embedding(self, req, round_idx: int) -> np.ndarray:
+        return self.embedder.embed_query(req.request_id, round_idx)
+
+    def partial_embedding(self, req, round_idx: int, ratio: float) -> np.ndarray:
+        return self.embedder.embed_partial(req.request_id, round_idx, ratio)
+
+    # ------------------------------------------------------------ generation
+    def gen_duration(self, n_prefill_tokens: int, batch: int, n_steps: int) -> float:
+        step = self.gen_step_base_us + self.gen_step_per_seq_us * batch
+        noise = float(self._rng.lognormal(0.0, self.gen_noise_sigma))
+        pre = self.prefill_us_per_token * n_prefill_tokens
+        return (step * n_steps) * noise + pre
+
+    # ------------------------------------------------------------- retrieval
+    def search_charged(
+        self, work: Sequence[tuple[np.ndarray, int, TopK]]
+    ) -> tuple[float, Callable[[], list]]:
+        """Returns (charged_us, results_fn).  results_fn() -> per-item
+        (dists, ids) candidate arrays (per-cluster top-k)."""
+        if not work:
+            return 0.0, lambda: []
+        # --- charge: host clusters at CPU rate, resident clusters at device
+        # rate; the two paths overlap (max), matching the paper's engine.
+        by_cluster: dict[int, int] = {}
+        for _, cid, _ in work:
+            by_cluster[cid] = by_cluster.get(cid, 0) + 1
+        host_us = dev_us = 0.0
+        n_dev = 0
+        for cid, nq in by_cluster.items():
+            c = self.cluster_cost_model.cost_us(int(self._sizes[cid]), nq)
+            if self.hybrid is not None and self.hybrid.cache.is_resident(cid):
+                dev_us += c / self.device_speedup
+                n_dev += 1
+            else:
+                host_us += c
+        if n_dev:
+            dev_us += self.device_launch_us
+        charge = max(host_us, dev_us)
+
+        # --- execute exactly (records accesses, drives cache updates)
+        def results_fn(work=tuple(work)) -> list:
+            base = [(q, cid, TopK.empty(tk.k)) for q, cid, tk in work]
+            if self.hybrid is not None:
+                res, _ = self.hybrid.search_substage(base)
+            else:
+                res = self.index.search_cluster_batch(base)
+            return [(r.dists[r.ids >= 0], r.ids[r.ids >= 0]) for r in res]
+
+        return charge, results_fn
+
+    # ------------------------------------------------------ fault injection
+    def maybe_straggle(self, dur: float) -> float:
+        if self.straggler_prob and self._rng.random() < self.straggler_prob:
+            return dur * self.straggler_factor
+        return dur
+
+    # -------------------------------------------------------- calibration
+    @classmethod
+    def calibrated(cls, index: IVFIndex, embedder, **kw) -> "SimBackend":
+        """Measure the host cluster-search cost curve on this machine."""
+        cm = ClusterCostModel.calibrate(index)
+        return cls(index, embedder, cost_model=cm, **kw)
+
+
+class RealBackend:
+    """Wall-clock backend: real JAX generation engine + hybrid retrieval."""
+
+    def __init__(self, gen_engine, index: IVFIndex, embedder,
+                 hybrid: Optional[HybridRetrievalEngine] = None):
+        self.gen_engine = gen_engine
+        self.index = index
+        self.embedder = embedder
+        self.hybrid = hybrid or HybridRetrievalEngine(index, cache_capacity=0)
+        self.cluster_cost_model = ClusterCostModel.calibrate(index)
+        self._sizes = index.cluster_sizes()
+
+    def query_embedding(self, req, round_idx: int) -> np.ndarray:
+        return self.embedder.embed_query(req.request_id, round_idx)
+
+    def partial_embedding(self, req, round_idx: int, ratio: float) -> np.ndarray:
+        return self.embedder.embed_partial(req.request_id, round_idx, ratio)
+
+    def gen_duration(self, n_prefill_tokens: int, batch: int, n_steps: int) -> float:
+        """Execute n_steps of real decoding on the engine; return measured us.
+        The scheduler passes the request set via bind_gen_batch beforehand."""
+        t0 = time.perf_counter()
+        self.gen_engine.step_batch(n_steps)
+        return (time.perf_counter() - t0) * 1e6
+
+    def search_charged(self, work):
+        if not work:
+            return 0.0, lambda: []
+        t0 = time.perf_counter()
+        base = [(q, cid, TopK.empty(tk.k)) for q, cid, tk in work]
+        res, timing = self.hybrid.search_substage(base)
+        out = [(r.dists[r.ids >= 0], r.ids[r.ids >= 0]) for r in res]
+        measured = (time.perf_counter() - t0) * 1e6
+        return measured, lambda: out
+
+    def maybe_straggle(self, dur: float) -> float:
+        return dur

@@ -1,0 +1,164 @@
+"""RAGraph: the paper's graph abstraction for heterogeneous RAG workflows.
+
+Matches Listing 1 of the paper:
+
+    g = RAGraph()
+    g.add_generation(0, prompt="Generate a hypothesis for {input}.",
+                     output="hypopara")
+    g.add_retrieval(1, topk=5, query="hypopara", output="docs")
+    g.add_generation(2, prompt="Answer {query} using {docs}.")
+    g.add_edge(START, 0); g.add_edge(0, 1)
+    g.add_edge(1, 2); g.add_edge(2, END)
+    # conditional control flow:
+    g.add_edge(2, lambda s: 1 if s.get("subquestion") else END)
+
+Nodes capture the *execution asymmetry* the paper highlights: a Retrieval
+node is a structurally-bounded sequence of cluster searches; a Generation
+node is an open-ended token-level process.  Both are therefore splittable
+into sub-stages (see transforms.py) — that property is what the whole
+scheduler exploits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Union
+
+
+class _Sentinel:
+    def __init__(self, name: str):
+        self.name = name
+
+    def __repr__(self):
+        return self.name
+
+
+START = _Sentinel("START")
+END = _Sentinel("END")
+
+NodeId = int
+EdgeTarget = Union[NodeId, _Sentinel, Callable[[dict], Union[NodeId, _Sentinel]]]
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationNode:
+    node_id: NodeId
+    prompt: str
+    output: str = "answer"
+    max_tokens: int = 256
+    # declarative knobs the scheduler may use
+    emit_partial_embeddings: bool = True  # allow speculative retrieval from it
+
+    kind = "generation"
+
+    def inputs(self) -> list[str]:
+        import string
+
+        return [f[1] for f in string.Formatter().parse(self.prompt) if f[1]]
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalNode:
+    node_id: NodeId
+    query: str  # state key holding the query text/embedding source
+    output: str = "docs"
+    topk: int = 5
+    nprobe: int = 0  # 0 -> server default
+
+    kind = "retrieval"
+
+    def inputs(self) -> list[str]:
+        return [self.query]
+
+
+Node = Union[GenerationNode, RetrievalNode]
+
+
+class RAGraph:
+    """User-facing workflow graph (static structure; per-request state lives
+    in RequestContext)."""
+
+    def __init__(self, name: str = "ragraph"):
+        self.name = name
+        self.nodes: dict[NodeId, Node] = {}
+        self.edges: dict[Any, list[EdgeTarget]] = {}
+
+    # ------------------------------------------------------------ primitives
+    def add_generation(self, node_id: NodeId, prompt: str, output: str = "answer",
+                       max_tokens: int = 256, **kw) -> "RAGraph":
+        if node_id in self.nodes:
+            raise ValueError(f"duplicate node id {node_id}")
+        self.nodes[node_id] = GenerationNode(node_id, prompt, output, max_tokens, **kw)
+        return self
+
+    def add_retrieval(self, node_id: NodeId, query: str, output: str = "docs",
+                      topk: int = 5, nprobe: int = 0) -> "RAGraph":
+        if node_id in self.nodes:
+            raise ValueError(f"duplicate node id {node_id}")
+        self.nodes[node_id] = RetrievalNode(node_id, query, output, topk, nprobe)
+        return self
+
+    def add_edge(self, src: Union[NodeId, _Sentinel], dst: EdgeTarget) -> "RAGraph":
+        self.edges.setdefault(_key(src), []).append(dst)
+        return self
+
+    # ------------------------------------------------------------- traversal
+    def entry(self) -> NodeId:
+        outs = self.edges.get("START", [])
+        if not outs:
+            raise ValueError("graph has no START edge")
+        first = outs[0]
+        if callable(first):
+            raise ValueError("START edge must be unconditional")
+        assert not isinstance(first, _Sentinel)
+        return first
+
+    def successor(self, node_id: NodeId, state: dict) -> Union[NodeId, _Sentinel]:
+        """Resolve the next node given per-request state (conditional edges
+        are evaluated in insertion order; first non-None wins)."""
+        for tgt in self.edges.get(_key(node_id), []):
+            if callable(tgt):
+                r = tgt(state)
+                if r is not None:
+                    return r
+            else:
+                return tgt
+        return END
+
+    def validate(self) -> None:
+        if "START" not in self.edges:
+            raise ValueError("missing START edge")
+        for src, dsts in self.edges.items():
+            if src not in ("START",) and src not in self.nodes:
+                raise ValueError(f"edge from unknown node {src}")
+            for d in dsts:
+                if callable(d) or isinstance(d, _Sentinel):
+                    continue
+                if d not in self.nodes:
+                    raise ValueError(f"edge to unknown node {d}")
+
+    # ----------------------------------------------------- interop adapters
+    @classmethod
+    def from_langchain_steps(cls, steps: list[dict], name: str = "imported") -> "RAGraph":
+        """Import a linear LangChain/LlamaIndex-style chain:
+        [{"type": "llm"|"retriever", ...kwargs}] -> RAGraph."""
+        g = cls(name)
+        prev: Union[NodeId, _Sentinel] = START
+        for i, s in enumerate(steps):
+            if s["type"] in ("llm", "generation"):
+                g.add_generation(i, prompt=s.get("prompt", "{input}"),
+                                 output=s.get("output", f"gen_{i}"),
+                                 max_tokens=s.get("max_tokens", 256))
+            elif s["type"] in ("retriever", "retrieval"):
+                g.add_retrieval(i, query=s.get("query", "input"),
+                                output=s.get("output", f"docs_{i}"),
+                                topk=s.get("topk", 5))
+            else:
+                raise ValueError(f"unknown step type {s['type']}")
+            g.add_edge(prev, i)
+            prev = i
+        g.add_edge(prev, END)
+        return g
+
+
+def _key(x):
+    return "START" if x is START else x

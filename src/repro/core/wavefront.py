@@ -1,0 +1,523 @@
+"""Wavefront scheduler + hybrid two-worker serving loop (paper §4.5, §5).
+
+The loop models the paper's runtime: a *generation worker* (accelerator) and
+a *retrieval worker* (host) execute concurrently; whenever one goes idle the
+scheduler traverses the RAGraphs of all in-flight requests, selects the next
+wavefront of ready sub-nodes, applies graph transformations (split under the
+Eq.1 budget, similarity reordering, speculative edges), and dispatches the
+transformed sub-nodes to that worker's queue.  Time is tracked event-driven
+(worker completion / request arrival), so baselines with coarse stages show
+their real head-of-line blocking and the fine-grained mode shows real
+overlap — on any host, including this single-CPU container, because work is
+*executed* exactly and *charged* through the backend's timing model.
+
+Modes (paper baselines, same loop, different policy switches):
+  sequential  LangChain-like: whole-stage retrieval jobs, FIFO one at a time
+  async       FlashRAG-like: whole-stage jobs, one-shot batch of all queued
+  hedra       sub-stage splitting + dynamic batching + reorder/cache/spec +
+              hot-cache device path
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.ragraph import GenerationNode, RetrievalNode
+from repro.core.runtime import GenProgress, RequestContext, RetProgress, RuntimeDAG
+from repro.core.similarity import LocalCache
+from repro.core.speculation import SpeculationPolicy, Speculator
+from repro.core.substage import TimeBudget
+from repro.core import transforms
+from repro.retrieval.ivf import TopK
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    mode: str = "hedra"  # hedra | async | sequential
+    nprobe: int = 64
+    topk: int = 5
+    enable_substage: bool = True
+    enable_reorder: bool = True
+    enable_early_term: bool = True
+    early_term_mode: str = "heuristic"  # heuristic (paper) | lossless
+    early_term_patience: int = 4  # clusters without top-k improvement
+    enable_cache_answer: bool = True
+    speculation: SpeculationPolicy = dataclasses.field(default_factory=SpeculationPolicy)
+    max_gen_batch: int = 64
+    sched_overhead_us: float = 120.0
+    straggler_redispatch: bool = True
+    straggler_cap: float = 2.0  # re-dispatch when > cap x expected
+    slo_us: float = 10e6
+
+    @classmethod
+    def preset(cls, mode: str, **kw) -> "SchedulerConfig":
+        if mode == "hedra":
+            return cls(mode="hedra", **kw)
+        if mode == "async":
+            base = dict(enable_substage=False, enable_reorder=False,
+                        enable_early_term=False, enable_cache_answer=False,
+                        speculation=SpeculationPolicy(mode="off"))
+            base.update(kw)
+            return cls(mode="async", **base)
+        if mode == "sequential":
+            base = dict(enable_substage=False, enable_reorder=False,
+                        enable_early_term=False, enable_cache_answer=False,
+                        speculation=SpeculationPolicy(mode="off"))
+            base.update(kw)
+            return cls(mode="sequential", **base)
+        raise ValueError(mode)
+
+
+@dataclasses.dataclass
+class Metrics:
+    latencies_us: list = dataclasses.field(default_factory=list)
+    finished: int = 0
+    sim_time_us: float = 0.0
+    gen_busy_us: float = 0.0
+    ret_busy_us: float = 0.0
+    gen_tokens: int = 0
+    substages_gen: int = 0
+    substages_ret: int = 0
+    cache_answers: int = 0
+    early_terms: int = 0
+    reorders: int = 0
+    spec_gen_attempts: int = 0
+    spec_gen_validated: int = 0
+    spec_gen_rollbacks: int = 0
+    spec_ret_launches: int = 0
+    straggler_redispatches: int = 0
+    slo_violations: int = 0
+
+    def summary(self) -> dict:
+        lat = np.asarray(self.latencies_us, np.float64)
+        t = max(self.sim_time_us, 1e-9)
+        return {
+            "finished": self.finished,
+            "avg_latency_ms": float(lat.mean() / 1e3) if lat.size else float("nan"),
+            "p50_latency_ms": float(np.percentile(lat, 50) / 1e3) if lat.size else float("nan"),
+            "p95_latency_ms": float(np.percentile(lat, 95) / 1e3) if lat.size else float("nan"),
+            "throughput_rps": self.finished / (t / 1e6),
+            "gen_util": self.gen_busy_us / t,
+            "ret_util": self.ret_busy_us / t,
+            "gen_tokens": self.gen_tokens,
+            "substages_gen": self.substages_gen,
+            "substages_ret": self.substages_ret,
+            "cache_answers": self.cache_answers,
+            "early_terms": self.early_terms,
+            "spec_gen_attempts": self.spec_gen_attempts,
+            "spec_gen_validated": self.spec_gen_validated,
+            "spec_gen_rollbacks": self.spec_gen_rollbacks,
+            "spec_ret_launches": self.spec_ret_launches,
+            "straggler_redispatches": self.straggler_redispatches,
+            "slo_violations": self.slo_violations,
+        }
+
+
+class WavefrontScheduler:
+    def __init__(self, backend, index, config: SchedulerConfig,
+                 workload=None):
+        from repro.serving.workload import WorkloadProfile
+
+        self.backend = backend
+        self.index = index
+        self.cfg = config
+        self.workload = workload or WorkloadProfile()
+        self.dag = RuntimeDAG()
+        self.budget = TimeBudget()
+        self.spec = Speculator(config.speculation)
+        self.metrics = Metrics()
+        self.pending: list[RequestContext] = []
+        self.active: list[RequestContext] = []
+        self.done: list[RequestContext] = []
+        self._ret_fifo: list[RequestContext] = []  # coarse-mode stage queue
+        self._spec_ret_round: dict[int, int] = {}  # req -> last spec-ret round
+
+    # ------------------------------------------------------------------ API
+    def add_request(self, req: RequestContext) -> None:
+        self.pending.append(req)
+        self.pending.sort(key=lambda r: r.arrival_us)
+
+    # -------------------------------------------------------------- helpers
+    def _enter_stage(self, req: RequestContext, now: float) -> None:
+        """(Re)initialise progress when a request sits at a fresh node.
+        Loops through instant completions (cache answers / empty nodes)."""
+        while True:
+            if req.finished:
+                return
+            if req.current is None:
+                req.start()
+            node = req.node
+            if isinstance(node, GenerationNode):
+                if req.gen is None:
+                    tgt = self.workload.gen_tokens(req.request_id, node.node_id,
+                                                   node.max_tokens)
+                    req.gen = GenProgress(target_tokens=tgt, started_at=now)
+                    req.log(now, "gen_stage_start", node.node_id)
+                return
+            assert isinstance(node, RetrievalNode)
+            if req.ret is None:
+                qv = self.backend.query_embedding(req, req.round_idx)
+                nprobe = node.nprobe or self.cfg.nprobe
+                queue = [int(c) for c in self.index.probe_order(qv[None], nprobe)[0]]
+                req.ret = RetProgress(
+                    query_vec=qv, cluster_queue=queue,
+                    topk=TopK.empty(node.topk or self.cfg.topk),
+                    k=node.topk or self.cfg.topk, nprobe=nprobe, started_at=now,
+                )
+                if req.sim_cache is None:
+                    req.sim_cache = LocalCache()
+                req.log(now, "ret_stage_start", node.node_id)
+                if self.cfg.enable_reorder or self.cfg.enable_cache_answer:
+                    rep = transforms.reorder_retrieval(req)
+                    if rep["reordered"]:
+                        self.metrics.reorders += 1
+                    if rep["cache_answer"] and self.cfg.enable_cache_answer:
+                        self.metrics.cache_answers += 1
+                        self._finish_ret_stage(req, now)
+                        continue  # advanced; maybe next stage is instant too
+                    if rep["cache_answer"]:
+                        # cache answers disabled: restore full queue
+                        req.ret.answered_from_cache = False
+                if not self.cfg.mode == "hedra":
+                    self._ret_fifo.append(req)
+            return
+
+    def _finish_ret_stage(self, req: RequestContext, now: float) -> None:
+        node = req.node
+        assert isinstance(node, RetrievalNode) and req.ret is not None
+        ids = req.ret.topk.ids
+        req.state[node.output] = [int(i) for i in ids if i >= 0]
+        req.sim_cache.update(req.ret.query_vec, req.ret.topk, self.index,
+                             req.ret.searched)
+        if req.ret.started_at >= 0:
+            self.budget.observe_retrieval_stage(now - req.ret.started_at)
+        req.round_idx += 1
+        req.log(now, "ret_stage_done", node.node_id)
+        # speculation resolution (dependency rewiring)
+        if req.gen is not None and req.gen.speculative_src is not None:
+            self.metrics.spec_gen_attempts += 1
+            ok = transforms.validate_or_rollback(self.dag, req, self.spec)
+            if ok:
+                self.metrics.spec_gen_validated += 1
+            else:
+                self.metrics.spec_gen_rollbacks += 1
+            # move to the generation node, keeping (or restarting) gen progress
+            nxt = req.graph.successor(req.current, req.state)
+            req.ret = None
+            from repro.core.ragraph import END
+
+            if nxt is END:
+                self._finish_request(req, now)
+            else:
+                req.current = int(nxt)
+                if req.gen is not None:
+                    req.gen.started_at = now if req.gen.started_at < 0 else req.gen.started_at
+                    # validated speculation that already finished generating
+                    if req.gen.done and req.gen.speculative_src is None:
+                        self._finish_gen_stage(req, now)
+            return
+        req.ret = None
+        gen_keep = req.gen
+        if req.advance():
+            req.gen = gen_keep if gen_keep is not None else None
+            self._enter_stage(req, now)
+        else:
+            self._finish_request(req, now)
+
+    def _finish_gen_stage(self, req: RequestContext, now: float) -> None:
+        node = req.node
+        assert isinstance(node, GenerationNode) and req.gen is not None
+        req.state[node.output] = {
+            "tokens": req.gen.generated,
+            "text": f"<gen:{req.request_id}:{node.node_id}>",
+        }
+        req.state.setdefault("_gen_history", []).append(node.node_id)
+        self.metrics.gen_tokens += req.gen.generated
+        req.gen_round += 1
+        req.log(now, "gen_stage_done", node.node_id)
+        req.gen = None
+        if req.advance():
+            self._enter_stage(req, now)
+        else:
+            self._finish_request(req, now)
+
+    def _finish_request(self, req: RequestContext, now: float) -> None:
+        req.finish_us = now
+        lat = now - req.arrival_us
+        self.metrics.latencies_us.append(lat)
+        if lat > self.cfg.slo_us:
+            self.metrics.slo_violations += 1
+        self.metrics.finished += 1
+        self.active.remove(req)
+        self.done.append(req)
+        self.dag.gc()
+
+    # ------------------------------------------------------ work assembly
+    def _assemble_gen(self, now: float):
+        """Continuous-batching generation sub-stage across requests."""
+        batch = [
+            r for r in self.active
+            if r.gen is not None and not r.gen.done
+            and r.gen.engine_seq != "inflight"
+        ][: self.cfg.max_gen_batch]
+        if not batch:
+            return None
+        n_steps = self.budget.gen_steps_for_budget(len(batch))
+        n_prefill_tokens = sum(
+            self.workload.prompt_tokens(r.request_id, r.current or 0)
+            for r in batch if not r.gen.prefilled
+        )
+        dur = self.backend.gen_duration(n_prefill_tokens, len(batch), n_steps)
+        dur = self._mitigate_straggler(dur, expected=dur)
+        for r in batch:
+            r.gen.engine_seq = "inflight"
+        self.metrics.substages_gen += 1
+        return {"reqs": batch, "n_steps": n_steps, "end": now + dur, "dur": dur}
+
+    def _assemble_ret(self, now: float):
+        if self.cfg.mode == "hedra":
+            return self._assemble_ret_substage(now)
+        return self._assemble_ret_coarse(now)
+
+    def _assemble_ret_substage(self, now: float):
+        jobs = []  # (req, clusters)
+        work = []  # (qvec, cid, topk) items
+        for r in self.active:
+            if r.ret is None or r.ret.done or getattr(r.ret, "_inflight", False):
+                continue
+            sn = transforms.split_retrieval_next(
+                self.dag, r, self.budget, self.backend.cluster_cost_model,
+                self.index.cluster_sizes(),
+            )
+            if sn is None:
+                continue
+            clusters = sn.payload["clusters"]
+            r.ret.cluster_queue = r.ret.cluster_queue[len(clusters):]
+            r.ret._inflight = True  # type: ignore[attr-defined]
+            jobs.append((r, clusters, sn))
+            for c in clusters:
+                work.append((r.ret.query_vec, c, r.ret.topk))
+        spec_items = self._maybe_spec_retrieval(now)
+        if not work and not spec_items:
+            return None
+        charge, results_fn = self.backend.search_charged(work + [w for _, w in spec_items])
+        dur = self._mitigate_straggler(charge, expected=charge)
+        self.metrics.substages_ret += 1
+        return {
+            "jobs": jobs, "work": work, "spec": spec_items,
+            "results_fn": results_fn, "end": now + dur, "dur": dur,
+        }
+
+    def _assemble_ret_coarse(self, now: float):
+        """Whole-stage jobs: sequential = FIFO-1, async = batch-all-queued."""
+        self._ret_fifo = [r for r in self._ret_fifo
+                          if r in self.active and r.ret is not None and not r.ret.done]
+        if not self._ret_fifo:
+            return None
+        # both coarse baselines dispatch whole stages, one-shot batched over
+        # everything queued; 'sequential' additionally holds the global lock
+        take = list(self._ret_fifo)
+        self._ret_fifo = []
+        jobs, work = [], []
+        for r in take:
+            clusters = list(r.ret.cluster_queue)
+            r.ret.cluster_queue = []
+            r.ret._inflight = True  # type: ignore[attr-defined]
+            jobs.append((r, clusters, None))
+            for c in clusters:
+                work.append((r.ret.query_vec, c, r.ret.topk))
+        charge, results_fn = self.backend.search_charged(work)
+        dur = self._mitigate_straggler(charge, expected=charge)
+        self.metrics.substages_ret += 1
+        return {"jobs": jobs, "work": work, "spec": [], "results_fn": results_fn,
+                "end": now + dur, "dur": dur}
+
+    def _maybe_spec_retrieval(self, now: float):
+        """Generation→Retrieval speculation: warm the LocalCache from a
+        partial-generation embedding (runs as low-priority ret work)."""
+        pol = self.cfg.speculation
+        ret_util = self.metrics.ret_busy_us / max(now, 1.0)
+        if not self.spec.throughput_gate(ret_util, 1.0):
+            return []
+        items = []
+        for r in self.active:
+            if r.gen is None or r.gen.done or r.gen.speculative_src is not None:
+                continue
+            node = r.graph.nodes.get(r.current)
+            if node is None or node.kind != "generation":
+                continue
+            nxt = r.graph.successor(r.current, r.state)
+            if not (isinstance(nxt, int) and
+                    isinstance(r.graph.nodes.get(nxt), RetrievalNode)):
+                continue
+            ratio = r.gen.generated / max(r.gen.target_tokens, 1)
+            if ratio < pol.spec_ret_ratio or self._spec_ret_round.get(r.request_id, -1) == r.round_idx:
+                continue
+            self._spec_ret_round[r.request_id] = r.round_idx
+            emb = self.backend.partial_embedding(r, r.round_idx, ratio)
+            probes = self.index.probe_order(emb[None], max(4, self.cfg.nprobe // 8))[0]
+            tk = TopK.empty(20)
+            for c in probes[:4]:
+                items.append((r, (emb, int(c), tk)))
+            self.metrics.spec_ret_launches += 1
+            if len(items) >= pol.max_spec_per_cycle * 4:
+                break
+        return items
+
+    def _maybe_spec_generation(self, now: float) -> None:
+        """Retrieval→Generation speculation: start the follower generation
+        from partial top-k when the gen engine is underutilised."""
+        pol = self.cfg.speculation
+        gen_load = len([r for r in self.active if r.gen is not None and not r.gen.done])
+        if not self.spec.throughput_gate(gen_load / self.cfg.max_gen_batch, 1.0):
+            return
+        cands = []
+        for r in self.active:
+            if r.ret is None or r.ret.done or r.gen is not None:
+                continue
+            nxt = r.graph.successor(r.current, r.state)
+            if not (isinstance(nxt, int) and
+                    isinstance(r.graph.nodes.get(nxt), GenerationNode)):
+                continue
+            total = len(r.ret.searched) + len(r.ret.cluster_queue)
+            d0 = float(np.sqrt(max(
+                self.index.centroid_dists(r.ret.query_vec[None])[0].min(), 1e-12)))
+            if self.spec.spec_gen_ready(len(r.ret.searched), total,
+                                        float(np.sqrt(max(r.ret.topk.kth, 0.0)))
+                                        if np.isfinite(r.ret.topk.kth) else np.inf,
+                                        d0):
+                cands.append((r.ret.topk.kth, r, nxt))
+        for _, r, nxt in self.spec.rank_spec_gen(cands)[: pol.max_spec_per_cycle]:
+            node = r.graph.nodes[nxt]
+            tgt = self.workload.gen_tokens(r.request_id, node.node_id, node.max_tokens)
+            basis = self.dag.new_subnode(r, "ret", {"clusters": list(r.ret.searched)})
+            self.dag.complete(basis)
+            transforms.add_speculative_generation(self.dag, r, basis, node, tgt,
+                                                  self.budget)
+            r.gen.started_at = now
+
+    def _mitigate_straggler(self, dur: float, expected: float) -> float:
+        raw = self.backend.maybe_straggle(dur)
+        if raw > self.cfg.straggler_cap * expected and self.cfg.straggler_redispatch:
+            self.metrics.straggler_redispatches += 1
+            return self.cfg.straggler_cap * expected + self.cfg.sched_overhead_us
+        return raw
+
+    # ------------------------------------------------------------ main loop
+    def run(self, max_time_us: float = 4e9) -> Metrics:
+        now = 0.0
+        gen_job = None
+        ret_job = None
+        guard = 0
+        while True:
+            guard += 1
+            if guard > 5_000_000:
+                raise RuntimeError("scheduler stuck — no progress")
+            # admit arrivals
+            while self.pending and self.pending[0].arrival_us <= now:
+                req = self.pending.pop(0)
+                self.active.append(req)
+                self._enter_stage(req, now)
+            # speculation decisions on the current wavefront
+            if self.cfg.speculation.enabled:
+                self._maybe_spec_generation(now)
+            # dispatch to idle workers
+            sequential_lock = (self.cfg.mode == "sequential" and
+                               (gen_job is not None or ret_job is not None))
+            if gen_job is None and not sequential_lock:
+                gen_job = self._assemble_gen(now)
+            sequential_lock = (self.cfg.mode == "sequential" and
+                               (gen_job is not None or ret_job is not None))
+            if ret_job is None and not sequential_lock:
+                ret_job = self._assemble_ret(now)
+            # advance virtual time
+            events = []
+            if gen_job:
+                events.append(gen_job["end"])
+            if ret_job:
+                events.append(ret_job["end"])
+            if self.pending:
+                events.append(self.pending[0].arrival_us)
+            if not events:
+                if self.active:
+                    # no work assembled but requests active -> enter stages
+                    for r in list(self.active):
+                        self._enter_stage(r, now)
+                    if any(r.gen or r.ret for r in self.active):
+                        continue
+                    raise RuntimeError(
+                        f"deadlock: {len(self.active)} active requests, no work")
+                break
+            now = min(events)
+            if now > max_time_us:
+                break
+            # completions
+            if gen_job and gen_job["end"] <= now:
+                self.metrics.gen_busy_us += gen_job["dur"]
+                self._complete_gen(gen_job, now)
+                gen_job = None
+            if ret_job and ret_job["end"] <= now:
+                self.metrics.ret_busy_us += ret_job["dur"]
+                self._complete_ret(ret_job, now)
+                ret_job = None
+        self.metrics.sim_time_us = now
+        return self.metrics
+
+    # ----------------------------------------------------------- completion
+    def _complete_gen(self, job, now: float) -> None:
+        for r in job["reqs"]:
+            # rolled back mid-flight: gen was replaced by a fresh progress
+            if r.gen is None or r.gen.engine_seq != "inflight":
+                continue
+            r.gen.engine_seq = None
+            if not r.gen.prefilled:
+                r.gen.prefilled = True
+            r.gen.generated = min(r.gen.generated + job["n_steps"],
+                                  r.gen.target_tokens)
+            if r.gen.done:
+                if r.gen.speculative_src is not None:
+                    continue  # wait for retrieval validation
+                node = r.graph.nodes.get(r.current)
+                if node is not None and node.kind == "generation":
+                    self._finish_gen_stage(r, now)
+
+    def _complete_ret(self, job, now: float) -> None:
+        results = job["results_fn"]()  # per work item: (dists, ids) candidates
+        idx = 0
+        for r, clusters, sn in job["jobs"]:
+            for _ in clusters:
+                d, i = results[idx]
+                idx += 1
+                r.ret.topk = r.ret.topk.merge(d, i)
+                # adaptive-termination streak (per cluster)
+                if r.ret.topk.kth < r.ret.last_kth - 1e-12:
+                    r.ret.no_improve = 0
+                    r.ret.last_kth = r.ret.topk.kth
+                else:
+                    r.ret.no_improve += 1
+            r.ret.searched.extend(clusters)
+            r.ret._inflight = False  # type: ignore[attr-defined]
+            if sn is not None:
+                self.dag.complete(sn)
+            if self.cfg.enable_early_term and not r.ret.done:
+                if transforms.maybe_early_terminate(
+                        self.index, r, mode=self.cfg.early_term_mode,
+                        patience=self.cfg.early_term_patience):
+                    self.metrics.early_terms += 1
+            if r.ret.done:
+                self._finish_ret_stage(r, now)
+        # speculative-retrieval warmups: results land in the LocalCache
+        spec_acc: dict[int, tuple] = {}
+        for r, (emb, cid, tk) in job["spec"]:
+            d, i = results[idx]
+            idx += 1
+            tk2 = spec_acc.get(r.request_id, (r, emb, tk, []))[2].merge(d, i)
+            probed = spec_acc.get(r.request_id, (r, emb, tk, []))[3] + [cid]
+            spec_acc[r.request_id] = (r, emb, tk2, probed)
+        for r, emb, tk2, probed in spec_acc.values():
+            if r.sim_cache is None:
+                r.sim_cache = LocalCache()
+            r.sim_cache.update(emb, tk2, self.index, probed)
+            self.spec.stats.attempted_ret += 1

@@ -1,0 +1,95 @@
+"""Activation sharding constraints (logical axes 'dp'/'tp').
+
+Model code calls ``constrain(x, 'dp', None, 'tp', None)``-style hints at the
+canonical points (post-QKV, FFN hidden, MoE dispatch buffers...).  Outside a
+``use_mesh`` scope these are no-ops, so single-device smoke tests and the
+Pallas interpret paths never see a mesh.  Axes that do not divide the
+corresponding dimension are dropped per-dimension — the same divisibility
+policy as the parameter rules, which is what keeps one rule set valid for
+all 10 architectures x 4 shapes x 2 meshes.
+
+Without these constraints XLA's SPMD partitioner resolves the GQA
+(kv_heads < tp) contraction by sharding head_dim and all-reducing full
+attention-score tensors — ~GBs per layer.  With them, k/v stay
+head-replicated and the schedule collapses to the expected
+all-gather(weights)/reduce-scatter(grads) pattern.  (Found in the first
+dry-run iteration; see EXPERIMENTS.md §Perf.)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, layout: str = "tp"):
+    prev, prev_layout = _mesh(), getattr(_STATE, "layout", "tp")
+    _STATE.mesh = mesh
+    _STATE.layout = layout
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+        _STATE.layout = prev_layout
+
+
+def active() -> bool:
+    return _mesh() is not None
+
+
+def _resolve(mesh: Mesh, dim: int, ax):
+    """logical 'dp'/'tp' -> mesh axes, dropped unless they divide dim."""
+    layout = getattr(_STATE, "layout", "tp")
+    if ax is None:
+        return None
+    if ax == "tp":
+        names = (("model",) if (layout in ("tp", "serve_tp")
+                                and "model" in mesh.axis_names) else ())
+    elif ax == "dp":
+        pool = (("pod", "data", "model") if layout == "dp_only"
+                else ("pod", "data"))
+        names = tuple(a for a in pool if a in mesh.axis_names)
+    else:
+        names = (ax,) if ax in mesh.axis_names else ()
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    if not names or size == 0 or dim % size != 0:
+        return None
+    return names if len(names) > 1 else names[0]
+
+
+def constrain(x: jax.Array, *spec):
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    assert len(spec) == x.ndim, f"spec rank {len(spec)} vs array rank {x.ndim}"
+    resolved = [_resolve(mesh, d, a) for d, a in zip(x.shape, spec)]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved))
+    )
+
+
+def dp_total() -> int:
+    """Size of the current data-parallel axis pool (1 outside a mesh scope).
+    Model code uses this to pick per-shard dispatch granularity (MoE)."""
+    mesh = _mesh()
+    if mesh is None:
+        return 1
+    layout = getattr(_STATE, "layout", "tp")
+    pool = (("pod", "data", "model") if layout == "dp_only" else ("pod", "data"))
+    size = 1
+    for a in pool:
+        if a in mesh.axis_names:
+            size *= mesh.shape[a]
+    return size

@@ -1,0 +1,75 @@
+"""Elastic scaling + failure handling for long-running jobs.
+
+Policy (documented for the 1000+-node posture; exercised in tests on the
+host mesh):
+
+* **Checkpoint/restart** — training saves every N steps (atomic, pruned);
+  on restart the launcher restores the latest step and the data pipeline
+  resumes deterministically from it (data.py is stateless-per-step).
+* **Re-mesh** — when the healthy device count changes, a new mesh is built,
+  train_step re-jitted with the same PartitionSpec rules (they only consult
+  divisibility, so smaller/larger data axes work), and the checkpoint is
+  restored with the new shardings; global batch is preserved by scaling the
+  microbatch count.
+* **Straggler mitigation** — serving side: sub-stages are the re-dispatch
+  quantum (wavefront scheduler); training side: the pod axis is pure DP, so
+  a slow pod bounds step time — the launcher monitors step-time EMA and
+  triggers re-mesh when a pod exceeds ``straggler_factor`` x median for
+  ``patience`` consecutive steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+
+from repro.training import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class ElasticConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    save_every: int = 50
+    keep: int = 3
+    straggler_factor: float = 2.0
+    patience: int = 5
+
+
+class ElasticRunner:
+    """Wraps a (re)jittable train loop with checkpoint/restart + re-mesh."""
+
+    def __init__(self, cfg: ElasticConfig, build_mesh: Callable[[], jax.sharding.Mesh],
+                 build_step: Callable[[jax.sharding.Mesh], Callable]):
+        self.cfg = cfg
+        self.build_mesh = build_mesh
+        self.build_step = build_step
+        self._slow_streak = 0
+
+    def resume_or_init(self, init_fn, shardings_fn):
+        mesh = self.build_mesh()
+        step_fn = self.build_step(mesh)
+        last = ckpt.latest_step(self.cfg.ckpt_dir)
+        if last is None:
+            state = init_fn(mesh)
+            start = 0
+        else:
+            like = jax.eval_shape(lambda: init_fn(mesh))
+            start, state, _ = ckpt.restore_checkpoint(
+                self.cfg.ckpt_dir, last, like=like, shardings=shardings_fn(mesh, like)
+            )
+        return mesh, step_fn, state, start
+
+    def maybe_save(self, step: int, state) -> Optional[str]:
+        if step % self.cfg.save_every == 0 and step > 0:
+            return ckpt.save_checkpoint(self.cfg.ckpt_dir, step, state,
+                                        keep=self.cfg.keep)
+        return None
+
+    def observe_step_time(self, dt: float, median_dt: float) -> bool:
+        """Returns True when a re-mesh should be triggered (straggler)."""
+        if median_dt > 0 and dt > self.cfg.straggler_factor * median_dt:
+            self._slow_streak += 1
+        else:
+            self._slow_streak = 0
+        return self._slow_streak >= self.cfg.patience

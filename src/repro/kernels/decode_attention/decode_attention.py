@@ -1,0 +1,118 @@
+"""Flash-decoding GQA attention Pallas TPU kernel.
+
+Decode attention is the memory-roofline op of serving: each step streams the
+whole KV cache once at arithmetic intensity ~G (query heads per KV head).
+The kernel keeps the online-softmax state (m, l, acc) for one (batch, kv
+head) pair in VMEM scratch while iterating KV tiles, so HBM traffic is
+exactly one read of K and V — no score matrix, no second pass.
+
+Layout notes (TPU):
+* q for one kv-head group is a (G, dh) tile — G is padded to the 8-sublane
+  floor in ops.py, dh is expected to be 64/128/256 (lane-aligned);
+* KV tiles are (SB, dh) with SB a multiple of 128;
+* per-sequence valid length masks the tail tile via broadcasted_iota.
+
+Grid: (B, KV, S // SB) with the KV-tile index innermost.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+f32 = jnp.float32
+NEG = -1.0e30
+
+
+def _decode_attn_kernel(
+    lengths_ref,  # (B,) int32 in SMEM
+    q_ref,        # (G, dh)
+    k_ref,        # (SB, dh)
+    v_ref,        # (SB, dh)
+    o_ref,        # (G, dh)
+    m_ref,        # (G, 1) scratch
+    l_ref,        # (G, 1) scratch
+    acc_ref,      # (G, dh) scratch
+    *,
+    sb: int,
+    n_s_tiles: int,
+    scale: float,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(f32) * scale            # (G, dh)
+    k = k_ref[...].astype(f32)                    # (SB, dh)
+    v = v_ref[...].astype(f32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=f32
+    )                                             # (G, SB)
+    length = lengths_ref[b]
+    col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + j * sb
+    s = jnp.where(col < length, s, NEG)
+
+    m_prev = m_ref[...]                           # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                        # (G, SB)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=f32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == n_s_tiles - 1)
+    def _fin():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sb", "interpret"))
+def decode_attention_pallas(
+    q: jax.Array,        # (B, KV, G, dh)  — reshaped/padded by ops.py
+    k_cache: jax.Array,  # (B, S, KV, dh)
+    v_cache: jax.Array,  # (B, S, KV, dh)
+    lengths: jax.Array,  # (B,) int32
+    *,
+    sb: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, KV, G, dh = q.shape
+    S = k_cache.shape[1]
+    sb = min(sb, S)
+    assert S % sb == 0, f"cache len {S} not divisible by KV tile {sb}"
+    n_s = S // sb
+    scale = 1.0 / math.sqrt(dh)
+
+    kernel = functools.partial(_decode_attn_kernel, sb=sb, n_s_tiles=n_s, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, n_s),
+        in_specs=[
+            pl.BlockSpec((None, None, G, dh), lambda b, h, j, ln: (b, h, 0, 0)),
+            pl.BlockSpec((None, sb, None, dh), lambda b, h, j, ln: (b, j, h, 0)),
+            pl.BlockSpec((None, sb, None, dh), lambda b, h, j, ln: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, G, dh), lambda b, h, j, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), f32),
+            pltpu.VMEM((G, 1), f32),
+            pltpu.VMEM((G, dh), f32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, dh), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k_cache, v_cache)
+    return out

@@ -1,0 +1,42 @@
+"""Public op: single-token GQA decode attention.
+
+Handles layout adaptation (H -> (KV, G) grouping, sublane padding of G) and
+backend dispatch: Pallas kernel on TPU, jnp oracle elsewhere, interpret mode
+for validation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "sb"))
+def decode_attention(q, k_cache, v_cache, lengths, *, impl: str = "auto", sb: int = 512):
+    """q (B, H, dh); k/v (B, S, KV, dh); lengths (B,) -> (B, H, dh)."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return decode_attention_ref(q, k_cache, v_cache, lengths)
+
+    B, H, dh = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, dh)
+    pad = (-G) % 8  # sublane alignment
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = decode_attention_pallas(
+        qg, k_cache, v_cache, lengths, sb=sb, interpret=(impl == "interpret")
+    )
+    if pad:
+        out = out[:, :, :G, :]
+    return out.reshape(B, H, dh)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the GQA decode-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def decode_attention_ref(
+    q: jax.Array,        # (B, H, dh) one new token per sequence
+    k_cache: jax.Array,  # (B, S, KV, dh)
+    v_cache: jax.Array,  # (B, S, KV, dh)
+    lengths: jax.Array,  # (B,) valid cache length per sequence
+) -> jax.Array:
+    """Softmax(q k^T / sqrt(dh)) v over the valid prefix.  -> (B, H, dh)."""
+    B, H, dh = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qf = q.reshape(B, KV, G, dh).astype(f32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache.astype(f32))
+    scores = scores / math.sqrt(dh)
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(f32))
+    return out.reshape(B, H, dh)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the fused IVF distance + top-k kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def ivf_scan_ref(
+    q_groups: jax.Array,      # (G, QB, d) query blocks (host pre-gathered)
+    group_cluster: jax.Array,  # (G,) int32 cluster id per group
+    slab: jax.Array,          # (C, L, d) padded cluster tiles
+    valid: jax.Array,         # (C,) int32 valid rows per cluster
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (dists (G, QB, k) f32 ascending, idx (G, QB, k) i32 row-in-cluster).
+
+    Squared L2 distances; padded rows get +inf and idx -1 when selected.
+    """
+    blocks = slab[group_cluster]            # (G, L, d)
+    nvalid = valid[group_cluster]           # (G,)
+    qf = q_groups.astype(f32)
+    bf = blocks.astype(f32)
+    d2 = (
+        (qf**2).sum(-1)[..., None]
+        - 2.0 * jnp.einsum("gqd,gld->gql", qf, bf)
+        + (bf**2).sum(-1)[:, None, :]
+    )                                        # (G, QB, L)
+    L = slab.shape[1]
+    mask = jnp.arange(L)[None, None, :] < nvalid[:, None, None]
+    d2 = jnp.where(mask, d2, jnp.inf)
+    neg_top, idx = jax.lax.top_k(-d2, k)     # ascending distances
+    dists = -neg_top
+    idx = jnp.where(jnp.isfinite(dists), idx, -1).astype(jnp.int32)
+    return dists.astype(f32), idx

@@ -1,0 +1,4 @@
+from repro.kernels.topk_merge.ops import topk_merge
+from repro.kernels.topk_merge.ref import topk_merge_ref
+
+__all__ = ["topk_merge", "topk_merge_ref"]

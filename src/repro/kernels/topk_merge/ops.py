@@ -1,0 +1,20 @@
+"""Public op: running top-k merge (kernel on TPU, jnp oracle elsewhere)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.topk_merge.ref import topk_merge_ref
+from repro.kernels.topk_merge.topk_merge import topk_merge_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def topk_merge(run_d, run_i, cand_d, cand_i, *, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return topk_merge_pallas(run_d, run_i, cand_d, cand_i)
+    if impl == "interpret":
+        return topk_merge_pallas(run_d, run_i, cand_d, cand_i, interpret=True)
+    return topk_merge_ref(run_d, run_i, cand_d, cand_i)

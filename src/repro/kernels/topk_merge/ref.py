@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the running top-k merge kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def topk_merge_ref(run_d, run_i, cand_d, cand_i):
+    """Merge running top-k with new candidates (both ascending-by-distance).
+
+    run_d/run_i: (Q, k); cand_d/cand_i: (Q, m).  Returns (Q, k) merged,
+    ascending, ties broken toward the running entries (stable).
+    """
+    k = run_d.shape[1]
+    d = jnp.concatenate([run_d.astype(f32), cand_d.astype(f32)], axis=1)
+    i = jnp.concatenate([run_i, cand_i], axis=1)
+    neg, sel = jax.lax.top_k(-d, k)
+    return -neg, jnp.take_along_axis(i, sel, axis=1)

@@ -1,0 +1,76 @@
+"""Fused running top-k merge Pallas TPU kernel.
+
+The retrieval scheduler merges every sub-stage's per-cluster candidates into
+each request's running top-k (scoreboard).  At pod scale this runs for
+thousands of in-flight (request, sub-stage) pairs per cycle; doing it as a
+concat + full sort wastes k·log and an HBM round-trip.  The kernel keeps
+both lists in VMEM and runs the same k-pass min/mask selection as ivf_scan
+(k is small — 5..32), one grid step per query block.
+
+Grid: (Q // QB,).  Everything fits one VMEM tile per step; the op is
+bandwidth-bound at ~(k+m) reads + k writes per query.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+f32 = jnp.float32
+BIG = 3.0e38
+
+
+def _merge_kernel(run_d_ref, run_i_ref, cand_d_ref, cand_i_ref,
+                  out_d_ref, out_i_ref, *, k: int):
+    rd = run_d_ref[...].astype(f32)
+    cd = cand_d_ref[...].astype(f32)
+    d = jnp.concatenate([rd, cd], axis=1)           # (QB, k+m)
+    idx = jnp.concatenate([run_i_ref[...], cand_i_ref[...]], axis=1)
+    d = jnp.where(jnp.isfinite(d), d, BIG)
+    pos = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    out_d, out_i = [], []
+    work = d
+    for _ in range(k):
+        m = jnp.min(work, axis=1, keepdims=True)
+        is_min = work <= m
+        cand_pos = jnp.where(is_min, pos, jnp.int32(2**30))
+        sel = jnp.min(cand_pos, axis=1, keepdims=True)  # first (stable)
+        out_d.append(m)
+        out_i.append(jnp.take_along_axis(idx, sel, axis=1))
+        work = jnp.where(pos == sel, BIG, work)
+    dmerged = jnp.concatenate(out_d, axis=1)
+    out_d_ref[...] = jnp.where(dmerged >= BIG, jnp.inf, dmerged)
+    out_i_ref[...] = jnp.concatenate(out_i, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("qb", "interpret"))
+def topk_merge_pallas(run_d, run_i, cand_d, cand_i, *, qb: int = 8,
+                      interpret: bool = False):
+    Q, k = run_d.shape
+    m = cand_d.shape[1]
+    qb = min(qb, Q)
+    assert Q % qb == 0, f"Q {Q} not divisible by query block {qb}"
+    kernel = functools.partial(_merge_kernel, k=k)
+    out_d, out_i = pl.pallas_call(
+        kernel,
+        grid=(Q // qb,),
+        in_specs=[
+            pl.BlockSpec((qb, k), lambda q: (q, 0)),
+            pl.BlockSpec((qb, k), lambda q: (q, 0)),
+            pl.BlockSpec((qb, m), lambda q: (q, 0)),
+            pl.BlockSpec((qb, m), lambda q: (q, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((qb, k), lambda q: (q, 0)),
+            pl.BlockSpec((qb, k), lambda q: (q, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), f32),
+            jax.ShapeDtypeStruct((Q, k), run_i.dtype),
+        ],
+        interpret=interpret,
+    )(run_d, run_i, cand_d, cand_i)
+    return out_d, out_i

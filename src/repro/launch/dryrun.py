@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, record memory analysis, cost analysis, and collective
+schedule — the inputs to EXPERIMENTS.md §Dry-run / §Roofline.
+
+The two lines above MUST stay the first statements in this module: jax locks
+the device count at first init, and only the dry-run wants 512 host devices.
+
+Usage (one cell per process; scripts/run_dryrun_all.py fans out):
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch qwen3-1.7b --shape train_4k --mesh both \
+        --out results/dryrun/qwen3-1.7b.train_4k.json
+
+Cost methodology: XLA's cost_analysis counts while-loop bodies once, so the
+scanned full-depth module under-reports FLOPs by ~n_layers.  Each cell is
+therefore compiled twice more in *unrolled depth-1 / depth-2* variants per
+unique segment type; per-layer slopes are extrapolated to full depth:
+
+    cost_full = cost(depth-1 base) + sum_seg (repeat_seg - 1) * slope(type(seg))
+
+The full scanned compile still provides memory analysis (exact: stacked
+params + caches are real buffers) and proves the sharding compiles.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import hlo as hloa
+from repro.configs import ARCH_IDS, SHAPES_BY_NAME, get_config, shape_applicable
+from repro.distributed.sharding import (
+    batch_spec,
+    decode_state_shardings,
+    dp_axes,
+    dp_size,
+    param_shardings,
+    to_named,
+)
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+
+
+def _shardings_for(cfg, shape, mesh, ispec, layout: str = "tp"):
+    """(in_shardings, out_shardings, donate) matching make_step_fn's signature."""
+    psh = param_shardings(cfg, mesh, ispec["params"], layout)
+    if shape.kind == "train":
+        osh = {
+            "mu": psh, "nu": psh,
+            "step": NamedSharding(mesh, P()),
+        }
+        bsh = to_named(mesh, batch_spec(cfg, mesh, shape, layout))
+        return (psh, osh, bsh), (NamedSharding(mesh, P()), psh, osh), (0, 1)
+    if shape.kind == "prefill":
+        bsh = to_named(mesh, batch_spec(cfg, mesh, shape, layout))
+        bsh = {k: v for k, v in bsh.items() if k in ispec["batch"]}
+        st_shape = jax.eval_shape(
+            S.make_step_fn(cfg, shape), ispec["params"], ispec["batch"]
+        )[1]
+        ssh = decode_state_shardings(cfg, mesh, shape.global_batch, st_shape, layout)
+        tok_sh = NamedSharding(mesh, P(
+            dp_axes(mesh, layout)
+            if shape.global_batch % dp_size(mesh, layout) == 0 else None))
+        return (psh, bsh), (tok_sh, ssh), ()
+    # decode
+    ssh = decode_state_shardings(cfg, mesh, shape.global_batch, ispec["state"], layout)
+    bax = dp_axes(mesh, layout) if shape.global_batch % dp_size(mesh, layout) == 0 else None
+    tok_sh = NamedSharding(mesh, P(bax))
+    return (psh, tok_sh, ssh), (tok_sh, ssh), (2,)
+
+
+def _lower_compile(cfg, shape, mesh, microbatch: int = 0, layout: str = "tp"):
+    ispec = S.input_specs(cfg, shape)
+    step = S.make_step_fn(cfg, shape, microbatch=microbatch)
+    in_sh, out_sh, donate = _shardings_for(cfg, shape, mesh, ispec, layout)
+    jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=donate)
+    if shape.kind == "train":
+        args = (ispec["params"], ispec["opt_state"], ispec["batch"])
+    elif shape.kind == "prefill":
+        args = (ispec["params"], ispec["batch"])
+    else:
+        args = (ispec["params"], ispec["tokens"], ispec["state"])
+    from repro.distributed.act_sharding import use_mesh
+
+    with mesh, use_mesh(mesh, layout):
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             microbatch: int = 0, skip_cost: bool = False,
+             overrides: dict | None = None, layout: str = "tp") -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "kind": shape.kind, "applicable": ok, "reason": reason,
+        "microbatch": microbatch, "overrides": overrides or {}, "layout": layout,
+    }
+    if not ok:
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = int(np.prod(list(mesh.shape.values())))
+    rec["chips"] = chips
+
+    # ---- full scanned compile: memory + sharding proof -------------------
+    t0 = time.time()
+    lowered, compiled = _lower_compile(cfg, shape, mesh, microbatch=microbatch,
+                                       layout=layout)
+    rec["compile_s"] = time.time() - t0
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "peak_bytes_est": ma.argument_size_in_bytes + ma.output_size_in_bytes
+        + ma.temp_size_in_bytes - ma.alias_size_in_bytes,
+    }
+    scan_costs = hloa.extract_costs(compiled)
+    rec["scan_level_costs"] = {
+        "flops_per_device": scan_costs.flops_per_device,
+        "bytes_per_device": scan_costs.bytes_per_device,
+        "collective_bytes": scan_costs.collectives.total_bytes,
+        "collective_counts": scan_costs.collectives.count_by_op,
+    }
+    del lowered, compiled
+
+    if mesh_kind == "multi" or skip_cost:
+        return rec  # multi-pod pass only proves the pod axis shards
+
+    # ---- depth-extrapolated exact costs -----------------------------------
+    # cost variants run microbatch=0: gradient accumulation is arithmetic-
+    # identical (tests/test_training.py::test_microbatch_equivalence), so
+    # FLOPs/bytes/collective totals match while compiles stay small
+    microbatch = 0
+    base_cfg = S.depth_variant(cfg, None, shape)
+    _, c_base = _lower_compile(base_cfg, shape, mesh, microbatch=microbatch,
+                               layout=layout)
+    costs = hloa.extract_costs(c_base)
+    base = costs
+    del c_base
+    rec["cost_variants"] = {"base_layers": base_cfg.n_layers + base_cfg.n_encoder_layers}
+    for t in S.unique_segment_types(cfg):
+        bumped = S.depth_variant(cfg, t, shape)
+        _, c_b = _lower_compile(bumped, shape, mesh, microbatch=microbatch,
+                                layout=layout)
+        slope = hloa.extract_costs(c_b).scaled_sub(base)
+        # negative slopes are compile noise (fusion differences between the
+        # 1- and 2-layer variants); per-layer cost cannot be negative
+        slope = hloa.CompiledCosts(
+            max(slope.flops_per_device, 0.0),
+            max(slope.bytes_per_device, 0.0),
+            hloa.CollectiveStats(
+                {k: max(v, 0) for k, v in slope.collectives.bytes_by_op.items()},
+                {k: max(v, 0) for k, v in slope.collectives.count_by_op.items()},
+                max(slope.collectives.f32_bytes, 0.0),
+            ),
+        )
+        del c_b
+        n_extra = S.layer_multiplier(cfg, t) - S.layer_multiplier(base_cfg, t)
+        costs = costs.plus_scaled(slope, n_extra)
+        rec["cost_variants"][str(t)] = {
+            "slope_flops": slope.flops_per_device,
+            "slope_bytes": slope.bytes_per_device,
+            "slope_coll_bytes": slope.collectives.total_bytes,
+            "extra_layers": n_extra,
+        }
+
+    from repro.analysis.memory_model import analytic_hbm_bytes
+
+    rec["roofline"] = hloa.roofline_terms(costs, chips)
+    tp = mesh.shape.get("model", 1) if layout in ("tp", "serve_tp") else 1
+    mem = analytic_hbm_bytes(cfg, shape, chips, tp=tp)
+    rec["roofline"]["analytic_hbm_bytes"] = mem
+    rec["roofline"]["t_memory_s"] = mem["total"] / hloa.HBM_BW
+    rec["roofline"]["t_memory_xla_upper_s"] = costs.bytes_per_device / hloa.HBM_BW
+    # recompute dominant with the analytic memory term
+    terms = {"compute": rec["roofline"]["t_compute_s"],
+             "memory": rec["roofline"]["t_memory_s"],
+             "collective": rec["roofline"]["t_collective_s"]}
+    rec["roofline"]["dominant"] = max(terms, key=terms.get)
+    rec["model"] = hloa.model_flops(cfg, shape, chips)
+    mfpd = rec["model"]["model_flops_per_device"]
+    rec["roofline"]["useful_flops_ratio"] = (
+        mfpd / costs.flops_per_device if costs.flops_per_device else 0.0
+    )
+    rec["roofline"]["roofline_frac_of_dominant"] = None  # filled by report
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", required=True, choices=list(SHAPES_BY_NAME))
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--skip-cost", action="store_true")
+    ap.add_argument("--layout", default="tp", choices=["tp", "serve_tp", "dp_only"])
+    ap.add_argument("--overrides", type=str, default="",
+                    help="JSON dict of ModelConfig overrides (perf experiments)")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    overrides = json.loads(args.overrides) if args.overrides else None
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    out = []
+    for mk in meshes:
+        try:
+            rec = run_cell(args.arch, args.shape, mk, microbatch=args.microbatch,
+                           skip_cost=args.skip_cost, overrides=overrides,
+                           layout=args.layout)
+        except Exception as e:  # noqa: BLE001
+            rec = {"arch": args.arch, "shape": args.shape, "mesh": mk,
+                   "error": repr(e), "traceback": traceback.format_exc()}
+        out.append(rec)
+        print(json.dumps({k: v for k, v in rec.items() if k != "traceback"},
+                         indent=2, default=str))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    main()

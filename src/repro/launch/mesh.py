@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax import,
+and smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the pod axis is pure
+    data parallelism over DCN."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Tiny mesh over however many devices exist (tests / examples)."""
+    n = len(jax.devices())
+    mp = max(1, min(model_parallel, n))
+    return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """All pure-DP axes of a mesh (pod included when present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,71 @@
+"""Production serving launcher: sharded decode over a mesh + HedraRAG
+scheduler.  On this container it runs reduced configs on the host mesh; the
+production path is exercised compile-only via launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.backends import RealBackend
+from repro.models import lm
+from repro.retrieval import (
+    CorpusConfig,
+    HybridRetrievalEngine,
+    IVFIndex,
+    SyntheticEmbedder,
+    make_corpus,
+)
+from repro.server import Server
+from repro.serving.engine import GenerationEngine
+from repro import workflows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b", choices=list(ARCH_IDS))
+    ap.add_argument("--n-requests", type=int, default=8)
+    ap.add_argument("--workflow", default="one-shot",
+                    choices=list(workflows.WORKFLOWS))
+    ap.add_argument("--max-new", type=int, default=24)
+    args = ap.parse_args()
+
+    docs, _, topics = make_corpus(CorpusConfig(n_docs=8000, dim=48, n_topics=64))
+    index = IVFIndex.build(docs, n_clusters=32, iters=4)
+    embedder = SyntheticEmbedder(topics)
+    hybrid = HybridRetrievalEngine(index, cache_capacity=8, kernel_impl="ref")
+
+    cfg = get_config(args.arch).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    engine = GenerationEngine(cfg, params, max_batch=8, max_len=160, eos_id=0)
+    backend = RealBackend(engine, index, embedder, hybrid=hybrid)
+
+    pending = [f"query {i}" for i in range(args.n_requests)]
+    orig = backend.gen_duration
+
+    def gen_duration(n_prefill_tokens, batch, n_steps):
+        while engine.can_admit() and pending:
+            p = pending.pop(0)
+            toks = (np.frombuffer(p.encode(), np.uint8).astype(np.int32)
+                    % (cfg.vocab_size - 2)) + 1
+            engine.add_sequence(toks, max_new=args.max_new)
+        return orig(n_prefill_tokens, batch, n_steps)
+
+    backend.gen_duration = gen_duration
+    server = Server(index, embedder, mode="hedra", backend=backend, nprobe=8)
+    for i in range(args.n_requests):
+        server.add_request(f"query {i}", workflows.build(args.workflow),
+                           arrival_us=i * 20_000.0)
+    t0 = time.perf_counter()
+    m = server.run()
+    print(f"served {m.finished} requests in {time.perf_counter()-t0:.2f}s wall")
+    for k, v in m.summary().items():
+        print(f"  {k:24s} {v}")
+
+
+if __name__ == "__main__":
+    main()

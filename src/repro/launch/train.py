@@ -1,0 +1,88 @@
+"""Production training launcher: mesh + sharded train_step + elastic loop.
+
+On real TPU hardware this runs under `python -m repro.launch.train --arch X`;
+on this CPU container it runs with the host mesh (1 device) for any reduced
+config, or use launch/dryrun.py for the 512-device compile-only path.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES_BY_NAME, get_config
+from repro.configs.base import ShapeConfig
+from repro.distributed.act_sharding import use_mesh
+from repro.distributed.elastic import ElasticConfig, ElasticRunner
+from repro.distributed.sharding import batch_spec, param_shardings, to_named
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import lm
+from repro.training.data import SyntheticTokenStream
+from repro.training.optimizer import OptConfig, init_opt_state
+from repro.training.train_step import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES_BY_NAME))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU-runnable)")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = SHAPES_BY_NAME[args.shape]
+    if args.reduced:
+        cfg = cfg.reduced()
+        shape = ShapeConfig(shape.name, 128, 8, shape.kind)
+
+    mesh = (make_production_mesh() if args.production_mesh else make_host_mesh())
+    ecfg = ElasticConfig(ckpt_dir=args.ckpt_dir, save_every=args.save_every)
+
+    def build_step(mesh):
+        step = make_train_step(cfg, OptConfig(total_steps=args.steps),
+                               microbatch=args.microbatch)
+        pshape = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+        psh = param_shardings(cfg, mesh, pshape)
+        osh = {"mu": psh, "nu": psh, "step": NamedSharding(mesh, P())}
+        bsh = to_named(mesh, batch_spec(cfg, mesh, shape))
+        return jax.jit(step, in_shardings=(psh, osh, bsh),
+                       out_shardings=(NamedSharding(mesh, P()), psh, osh, None),
+                       donate_argnums=(0, 1))
+
+    def init_fn(mesh):
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        return {"params": params, "opt": init_opt_state(params)}
+
+    runner = ElasticRunner(ecfg, lambda: mesh, build_step)
+    mesh, step_fn, state, start = runner.resume_or_init(init_fn, lambda m, l: None)
+    ds = SyntheticTokenStream(cfg, shape)
+    params, opt = state["params"], state["opt"]
+
+    dts = []
+    with mesh, use_mesh(mesh):
+        for step in range(start, args.steps):
+            batch = {k: np.asarray(v) for k, v in ds.batch_at(step).items()}
+            t0 = time.time()
+            loss, params, opt, stats = step_fn(params, opt, batch)
+            loss = float(loss)
+            dt = time.time() - t0
+            dts.append(dt)
+            if runner.observe_step_time(dt, float(np.median(dts))):
+                print("straggler streak detected -> re-mesh would trigger here")
+            runner.maybe_save(step, {"params": params, "opt": opt})
+            if step % 10 == 0:
+                print(f"step {step} loss {loss:.4f} dt {dt*1e3:.0f}ms")
+    print("training loop done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.models.lm import (
+    decode_step,
+    init_decode_state,
+    init_params,
+    prefill,
+    train_loss,
+)
+
+__all__ = ["init_params", "train_loss", "prefill", "decode_step", "init_decode_state"]

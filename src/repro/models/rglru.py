@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block:  x -> [W_in1 -> causal conv1d -> RG-LRU]  *  gelu(W_in2 x)  -> W_out
+RG-LRU: r_t = sigma(W_a c_t + b_a),  i_t = sigma(W_x c_t + b_x)
+        a_t = exp(-c * softplus(lambda) * r_t)           (c = 8)
+        h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * c_t)
+
+TPU adaptation: train/prefill uses ``lax.associative_scan`` over the linear
+recurrence (log-depth, parallel across the sequence); decode is the O(1)
+elementwise update.  The conv is width-4 causal depthwise, realised as a sum
+of shifted slices (no im2col).
+
+State layout (decode): {"h": (B, W) f32, "conv": (B, cw-1, W)}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, Segment
+from repro.distributed.act_sharding import constrain
+from repro.models.layers import _dense, dtype_of
+
+f32 = jnp.float32
+_C = 8.0
+
+
+def init_rglru(cfg: ModelConfig, seg: Segment, key) -> dict:
+    dt = dtype_of(cfg)
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "w_in1": _dense(ks[0], (d, w), dt),
+        "w_in2": _dense(ks[1], (d, w), dt),
+        "w_out": _dense(ks[2], (w, d), dt),
+        "conv_w": _dense(ks[3], (cfg.conv_width, w), dt, scale=0.3),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_a": _dense(ks[4], (w, w), dt),
+        "b_a": jnp.zeros((w,), f32),
+        "w_x": _dense(ks[5], (w, w), dt),
+        "b_x": jnp.zeros((w,), f32),
+        # softplus(lam) ~ U(...) so that a^c in [0.9, 0.999] at r=1 (paper init)
+        "lam": jax.random.uniform(ks[6], (w,), f32, 0.9, 1.1),
+    }
+
+
+def _causal_conv(p: dict, x: jax.Array, tail: jax.Array | None = None):
+    """x: (B, S, W).  tail: (B, cw-1, W) previous inputs for decode/prefill."""
+    cw = p["conv_w"].shape[0]
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    out = p["conv_b"]
+    pieces = [xp[:, j : j + S] * p["conv_w"][j] for j in range(cw)]
+    return sum(pieces) + out
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), f32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype_of(cfg)),
+    }
+
+
+def _gates(p: dict, c: jax.Array):
+    cf = c.astype(f32)
+    r = jax.nn.sigmoid(cf @ p["w_a"].astype(f32) + p["b_a"])
+    i = jax.nn.sigmoid(cf @ p["w_x"].astype(f32) + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * cf)
+    return a, b
+
+
+def apply_rglru(cfg: ModelConfig, seg: Segment, p: dict, x: jax.Array, *, mode: str,
+                state=None, **_unused):
+    B, S, d = x.shape
+    branch = constrain(x @ p["w_in1"], "dp", None, "tp")
+    gate = constrain(jax.nn.gelu(x @ p["w_in2"]), "dp", None, "tp")
+
+    if mode in ("train", "prefill"):
+        c = _causal_conv(p, branch)
+        a, b = _gates(p, c)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = lax.associative_scan(combine, (a, b), axis=1)
+        out = (h.astype(x.dtype) * gate) @ p["w_out"]
+        st = None
+        if mode == "prefill":
+            cw = cfg.conv_width
+            tail = branch[:, -(cw - 1) :, :]
+            pad = (cw - 1) - tail.shape[1]
+            if pad > 0:
+                tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+            st = {"h": h[:, -1].astype(f32), "conv": tail}
+        return out, st
+
+    # decode (S == 1)
+    assert state is not None
+    tail = state["conv"]
+    c = _causal_conv(p, branch, tail=tail)
+    a, b = _gates(p, c)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    out = (h[:, None].astype(x.dtype) * gate) @ p["w_out"]
+    new_tail = jnp.concatenate([tail[:, 1:], branch.astype(tail.dtype)], axis=1)
+    return out, {"h": h, "conv": new_tail}

@@ -1,0 +1,193 @@
+"""RWKV-6 "Finch" time-mix (arXiv:2404.05892) — data-dependent per-channel
+decay linear recurrence.
+
+TPU adaptation: instead of a token-sequential CUDA recurrence we use a
+*chunked* parallel form (GLA-style).  Within a chunk of L tokens all work is
+dense einsums (MXU-friendly); chunks are processed with a ``lax.scan``
+carrying the (B, H, N, N) state.  Numerics: the pairwise decay exponent
+``p_excl[t] - P[s]`` is computed explicitly per (t, s, n) and is always <= 0
+for s < t, so the chunked form is exp-overflow-safe at any decay rate (this
+is why we keep L modest, default 32..128: the (L, L, N) exponent tensor stays
+in VMEM range).
+
+State layout (decode):  {"S": (B, H, N, N) f32, "x_prev": (B, 1, d)}
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, Segment
+from repro.distributed.act_sharding import constrain
+from repro.models.layers import _dense, dtype_of
+
+f32 = jnp.float32
+
+TIME_MIX_EXTRA_DIM = 32
+
+
+def init_timemix(cfg: ModelConfig, seg: Segment, key) -> dict:
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    H, N = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    A, D = TIME_MIX_EXTRA_DIM, cfg.rwkv_decay_lora
+    ks = jax.random.split(key, 12)
+    return {
+        "mu_x": jnp.full((d,), 0.5, dt),
+        "mu_5": jnp.full((5, d), 0.5, dt),  # base mix for (w, k, v, r, g)
+        "tm_w1": _dense(ks[0], (d, 5 * A), dt),
+        "tm_w2": _dense(ks[1], (5, A, d), dt, scale=0.1 / math.sqrt(A)),
+        "wr": _dense(ks[2], (d, d), dt),
+        "wk": _dense(ks[3], (d, d), dt),
+        "wv": _dense(ks[4], (d, d), dt),
+        "wg": _dense(ks[5], (d, d), dt),
+        "w0": jnp.full((d,), -6.0, f32),  # decay base: w = -exp(w0 + lora)
+        "wd_w1": _dense(ks[6], (d, D), dt),
+        "wd_w2": _dense(ks[7], (D, d), dt, scale=0.1 / math.sqrt(D)),
+        "u": (jax.random.normal(ks[8], (H, N), f32) * 0.1),  # bonus
+        "ln_scale": jnp.ones((d,), dt),
+        "ln_bias": jnp.zeros((d,), dt),
+        "wo": _dense(ks[9], (d, d), dt),
+    }
+
+
+def _ddlerp(p: dict, x: jax.Array, xs: jax.Array):
+    """Data-dependent token-shift mixing -> the 5 projected inputs."""
+    dx = xs - x
+    xxx = x + dx * p["mu_x"]
+    a = jnp.tanh(xxx @ p["tm_w1"])  # (B, S, 5A)
+    B, S, _ = a.shape
+    a = a.reshape(B, S, 5, TIME_MIX_EXTRA_DIM)
+    mix = jnp.einsum("bsfa,fad->bsfd", a, p["tm_w2"].astype(a.dtype))
+    mix = mix + p["mu_5"]  # (B, S, 5, d)
+    return [x + dx * mix[:, :, i] for i in range(5)]
+
+
+def _project(cfg: ModelConfig, p: dict, x: jax.Array, xs: jax.Array):
+    H, N = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    B, S, d = x.shape
+    m_w, m_k, m_v, m_r, m_g = _ddlerp(p, x, xs)
+    r = constrain((m_r @ p["wr"]).reshape(B, S, H, N), "dp", None, "tp", None)
+    k = constrain((m_k @ p["wk"]).reshape(B, S, H, N), "dp", None, "tp", None)
+    v = constrain((m_v @ p["wv"]).reshape(B, S, H, N), "dp", None, "tp", None)
+    g = constrain(jax.nn.silu(m_g @ p["wg"]), "dp", None, "tp")
+    lw = -jnp.exp(
+        p["w0"] + (jnp.tanh(m_w @ p["wd_w1"]) @ p["wd_w2"]).astype(f32)
+    )  # log decay, strictly negative; (B, S, d)
+    lw = lw.reshape(B, S, H, N)
+    return r, k, v, g, lw
+
+
+def _group_norm(cfg: ModelConfig, p: dict, y: jax.Array) -> jax.Array:
+    """Per-head group norm over (H, N) -> flattened d."""
+    B, S, H, N = y.shape
+    yf = y.astype(f32)
+    mu = yf.mean(-1, keepdims=True)
+    var = ((yf - mu) ** 2).mean(-1, keepdims=True)
+    yn = (yf - mu) * lax.rsqrt(var + 64e-5)
+    yn = yn.reshape(B, S, H * N)
+    return yn * p["ln_scale"].astype(f32) + p["ln_bias"].astype(f32)
+
+
+def _chunk_scan(r, k, v, lw, u, S0, chunk: int = 32, unroll: bool = False):
+    """Chunked WKV6: r,k,v,lw (B, S, H, N) fp32; S0 (B, H, N, N) fp32.
+
+    Returns (y (B,S,H,N), S_final).  S is the k->v linear map:
+        y_t = r_t @ (S_{t-1} + diag(u) k_t v_t^T)
+        S_t = diag(exp(lw_t)) S_{t-1} + k_t v_t^T
+    """
+    B, S, H, N = r.shape
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        # zero k/v/r and zero log-decay (decay=1) leave the state untouched
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, lw = zpad(r), zpad(k), zpad(v), zpad(lw)
+        S_orig = S
+        S = S + pad
+    nc = S // L
+
+    def seq4(x):
+        return x.reshape(B, nc, L, H, N).transpose(1, 0, 2, 3, 4)  # (nc,B,L,H,N)
+
+    rc, kc, vc, lwc = map(seq4, (r, k, v, lw))
+
+    def body(Sprev, inp):
+        rr, kk, vv, ww = inp  # (B, L, H, N)
+        P = jnp.cumsum(ww, axis=1)  # inclusive log-decay prefix
+        p_excl = P - ww
+        # inter-chunk: state contribution decayed to each t
+        y = jnp.einsum("blhn,bhnm->blhm", rr * jnp.exp(p_excl), Sprev)
+        # intra-chunk pairwise decays (always <= 0 where used)
+        D = p_excl[:, :, None, :, :] - P[:, None, :, :, :]  # (B, t, s, H, N)
+        t_idx = jnp.arange(L)
+        causal = (t_idx[:, None] > t_idx[None, :])[None, :, :, None, None]
+        E = jnp.where(causal, D, -jnp.inf)
+        A = jnp.einsum("bthn,bshn,btshn->bths", rr, kk, jnp.exp(E))
+        diag = jnp.einsum("bthn,hn,bthn->bth", rr, u, kk)  # bonus on s == t
+        A = A + diag[:, :, :, None] * jnp.eye(L)[None, :, None, :]
+        y = y + jnp.einsum("bths,bshm->bthm", A, vv)
+        # state update: S_new = diag(exp(P_L)) S + sum_s (k_s e^{P_L - P_s}) v_s^T
+        decay_all = jnp.exp(P[:, -1])  # (B, H, N)
+        kd = kk * jnp.exp(P[:, -1:, :, :] - P)
+        S_new = decay_all[..., None] * Sprev + jnp.einsum("blhn,blhm->bhnm", kd, vv)
+        return S_new, y
+
+    if unroll:
+        Scur, ys = S0, []
+        for i in range(nc):
+            Scur, yi = body(Scur, (rc[i], kc[i], vc[i], lwc[i]))
+            ys.append(yi)
+        S_final, ys = Scur, jnp.stack(ys)
+    else:
+        S_final, ys = lax.scan(body, S0, (rc, kc, vc, lwc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, N)
+    if pad:
+        y = y[:, :S_orig]
+    return y, S_final
+
+
+def timemix_init_state(cfg: ModelConfig, batch: int):
+    H, N = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    return {
+        "S": jnp.zeros((batch, H, N, N), f32),
+        "x_prev": jnp.zeros((batch, 1, cfg.d_model), dtype_of(cfg)),
+    }
+
+
+def apply_timemix(cfg: ModelConfig, seg: Segment, p: dict, x: jax.Array, *, mode: str,
+                  state=None, **_unused):
+    B, S, d = x.shape
+    H, N = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    u = p["u"]
+
+    if mode in ("train", "prefill"):
+        xs = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        r, k, v, g, lw = _project(cfg, p, x, xs)
+        S0 = jnp.zeros((B, H, N, N), f32)
+        y, S_fin = _chunk_scan(r.astype(f32), k.astype(f32), v.astype(f32), lw, u, S0,
+                               chunk=cfg.rwkv_chunk, unroll=cfg.unroll_scans)
+        out = _group_norm(cfg, p, y).astype(x.dtype) * g
+        out = out @ p["wo"]
+        st = None
+        if mode == "prefill":
+            st = {"S": S_fin, "x_prev": x[:, -1:, :]}
+        return out, st
+
+    # decode
+    assert state is not None
+    xs = state["x_prev"]
+    r, k, v, g, lw = _project(cfg, p, x, xs)
+    r1, k1, v1 = r[:, 0].astype(f32), k[:, 0].astype(f32), v[:, 0].astype(f32)
+    Sm = state["S"]  # (B, H, N, N)
+    kv = jnp.einsum("bhn,bhm->bhnm", k1, v1)
+    y = jnp.einsum("bhn,bhnm->bhm", r1, Sm + u[None, :, :, None] * kv)
+    S_new = jnp.exp(lw[:, 0])[..., None] * Sm + kv
+    y = y[:, None]  # (B, 1, H, N) time axis
+    y = y.reshape(B, 1, H, N)
+    out = _group_norm(cfg, p, y).astype(x.dtype) * g
+    out = out @ p["wo"]
+    return out, {"S": S_new, "x_prev": x}

@@ -1,0 +1,18 @@
+from repro.retrieval.hotcache import AccessTracker, HotClusterCache, plan_memory_split
+from repro.retrieval.hybrid import HybridRetrievalEngine, engine_from_memory_budget
+from repro.retrieval.ivf import ClusterCostModel, IVFIndex, TopK
+from repro.retrieval.synthetic import CorpusConfig, SyntheticEmbedder, make_corpus
+
+__all__ = [
+    "IVFIndex",
+    "TopK",
+    "ClusterCostModel",
+    "HotClusterCache",
+    "AccessTracker",
+    "plan_memory_split",
+    "HybridRetrievalEngine",
+    "engine_from_memory_budget",
+    "CorpusConfig",
+    "make_corpus",
+    "SyntheticEmbedder",
+]

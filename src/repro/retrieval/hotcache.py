@@ -1,0 +1,209 @@
+"""Partial device index cache with asynchronous updates (paper §4.4, C6).
+
+The accelerator cannot hold the whole IVF index next to LM weights and KV
+cache, but cluster access is heavily skewed (paper Fig. 8: top 20% of
+clusters -> ~69% of compute).  We therefore cache the top-``gc`` hottest
+clusters in device memory:
+
+* access frequencies are tracked with an exponential moving average so the
+  hot set adapts as workloads shift;
+* the cached set is refreshed every ``update_interval`` sub-stages (50 in the
+  paper) — *not* on demand — to avoid host<->device link contention;
+* swaps are asynchronous: a cluster being loaded is "in transit" for
+  ``transit_substages`` sub-stages, during which searches for it fall back to
+  the host path (exactly the paper's rule);
+* Eq. (2) picks the KV-cache size (and therefore the cache budget) by
+  balancing generation vs retrieval throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Access tracking
+# ---------------------------------------------------------------------------
+
+
+class AccessTracker:
+    """Per-cluster EMA access frequency."""
+
+    def __init__(self, n_clusters: int, decay: float = 0.98):
+        self.freq = np.zeros(n_clusters, np.float64)
+        self.decay = decay
+        self.total_accesses = 0
+
+    def record(self, cluster_ids: np.ndarray | list[int]) -> None:
+        ids = np.asarray(cluster_ids, np.int64)
+        np.add.at(self.freq, ids, 1.0)
+        self.total_accesses += int(ids.size)
+
+    def tick(self) -> None:
+        self.freq *= self.decay
+
+    def top(self, n: int) -> np.ndarray:
+        n = min(n, self.freq.size)
+        part = np.argpartition(-self.freq, n - 1)[:n]
+        return part[np.argsort(-self.freq[part], kind="stable")]
+
+    def skewness_report(self, fractions=(0.05, 0.1, 0.2, 0.5)) -> dict:
+        """Fraction of accesses covered by the top-x%% clusters (Fig. 8)."""
+        srt = np.sort(self.freq)[::-1]
+        tot = max(srt.sum(), 1e-9)
+        cum = np.cumsum(srt) / tot
+        return {
+            f"top_{int(f*100)}pct": float(cum[max(int(len(srt) * f) - 1, 0)])
+            for f in fractions
+        }
+
+
+# ---------------------------------------------------------------------------
+# The cache
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    transit_blocked: int = 0
+    swaps: int = 0
+    updates: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+
+class HotClusterCache:
+    """Device-resident cache of the hottest IVF clusters.
+
+    ``loader(cid) -> None`` is called when a cluster becomes resident; in the
+    real engine it device_puts the cluster tile into the cache slab.  Loads
+    become *visible* only ``transit_substages`` sub-stages later.
+    """
+
+    def __init__(
+        self,
+        n_clusters: int,
+        capacity: int,
+        *,
+        update_interval: int = 50,
+        transit_substages: int = 2,
+        decay: float = 0.98,
+        loader: Optional[Callable[[int, int], None]] = None,
+    ):
+        self.tracker = AccessTracker(n_clusters, decay=decay)
+        self.capacity = int(capacity)
+        self.update_interval = update_interval
+        self.transit_substages = transit_substages
+        self.loader = loader
+        self.stats = CacheStats()
+        self._resident: dict[int, int] = {}  # cid -> slot
+        self._transit: dict[int, int] = {}  # cid -> substages remaining
+        self._free_slots = list(range(self.capacity))
+        self._substage = 0
+
+    # ------------------------------------------------------------------ query
+    def is_resident(self, cid: int) -> bool:
+        return cid in self._resident and cid not in self._transit
+
+    def slot_of(self, cid: int) -> int:
+        return self._resident[cid]
+
+    def lookup(self, cid: int) -> bool:
+        """Record an access and return device-residency (False -> host path)."""
+        self.tracker.record([cid])
+        if cid in self._transit:
+            self.stats.transit_blocked += 1
+            self.stats.misses += 1
+            return False
+        if cid in self._resident:
+            self.stats.hits += 1
+            return True
+        self.stats.misses += 1
+        return False
+
+    @property
+    def resident_ids(self) -> list[int]:
+        return [c for c in self._resident if c not in self._transit]
+
+    # ------------------------------------------------------------------- tick
+    def end_substage(self) -> None:
+        """Advance one sub-stage: progress transits, maybe refresh hot set."""
+        self._substage += 1
+        done = []
+        for cid in list(self._transit):
+            self._transit[cid] -= 1
+            if self._transit[cid] <= 0:
+                done.append(cid)
+        for cid in done:
+            del self._transit[cid]
+        self.tracker.tick()
+        if self.capacity and self._substage % self.update_interval == 0:
+            self._refresh()
+
+    def _refresh(self) -> None:
+        self.stats.updates += 1
+        want = set(int(c) for c in self.tracker.top(self.capacity))
+        have = set(self._resident)
+        evict = list(have - want)
+        load = [c for c in self.tracker.top(self.capacity) if int(c) not in have]
+        # evict first to free slots; eviction is instantaneous (drop only)
+        for cid in evict:
+            self._free_slots.append(self._resident.pop(cid))
+            self._transit.pop(cid, None)
+        for cid in load:
+            if not self._free_slots:
+                break
+            cid = int(cid)
+            slot = self._free_slots.pop()
+            self._resident[cid] = slot
+            self._transit[cid] = self.transit_substages
+            self.stats.swaps += 1
+            if self.loader is not None:
+                self.loader(cid, slot)
+
+
+# ---------------------------------------------------------------------------
+# Eq. (2): KV-cache vs index-cache memory split
+# ---------------------------------------------------------------------------
+
+
+def plan_memory_split(
+    total_bytes: int,
+    *,
+    t_gen: Callable[[int, float], float],
+    t_ret: Callable[[float], float],
+    rps_g: float,
+    rps_r: float,
+    kv_candidates: list[int],
+) -> tuple[int, int]:
+    """argmax_{KV_size} min{ T_G(KV_size, rps_G), T_R(rps_R) }   (paper Eq. 2)
+
+    Returns (kv_bytes, index_cache_bytes).  ``t_gen``/``t_ret`` come from
+    offline characterisation (benchmarks/bench_engines.py writes the tables).
+    Ties break toward the *smallest* KV size — leftover memory is worth more
+    as index cache.
+    """
+    tr = t_ret(rps_r)
+    best = None
+    for kv in sorted(c for c in kv_candidates if c <= total_bytes):
+        score = min(t_gen(kv, rps_g), tr)
+        if best is None or score > best[0] + 1e-12:
+            best = (score, kv)
+    if best is None:
+        kv = min(kv_candidates)
+        return kv, max(total_bytes - kv, 0)
+    return best[1], total_bytes - best[1]
+
+
+def capacity_from_bytes(cache_bytes: int, tile_len: int, dim: int,
+                        dtype_bytes: int = 4) -> int:
+    """How many cluster tiles fit in the index-cache budget."""
+    per = tile_len * dim * dtype_bytes
+    return max(cache_bytes // per, 0) if per else 0

@@ -1,0 +1,177 @@
+"""Hybrid host/device retrieval engine (paper §4.4, Fig. 11).
+
+Per sub-stage the engine receives a batch of (query, cluster, running-topk)
+work items spanning requests.  Items whose cluster is resident in the device
+hot cache are packed into query-groups and scanned by the fused Pallas kernel
+(jnp oracle off-TPU); the rest run on the host path.  Both paths share the
+``TopK`` merge, and the caller treats their runtimes as overlapped (they
+execute on different resources in the real system).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.retrieval.hotcache import HotClusterCache, capacity_from_bytes
+from repro.retrieval.ivf import IVFIndex, TopK
+
+QB = 8  # queries per device work group (sublane-aligned)
+
+
+@dataclasses.dataclass
+class SubstageTiming:
+    host_us: float = 0.0
+    device_us: float = 0.0
+    n_host_items: int = 0
+    n_device_items: int = 0
+
+    @property
+    def overlapped_us(self) -> float:
+        return max(self.host_us, self.device_us)
+
+
+class HybridRetrievalEngine:
+    def __init__(
+        self,
+        index: IVFIndex,
+        *,
+        cache_capacity: int = 0,
+        tile_len: int = 0,
+        update_interval: int = 50,
+        transit_substages: int = 2,
+        kernel_impl: str = "auto",
+        topk_default: int = 10,
+    ):
+        import jax.numpy as jnp
+
+        self.index = index
+        self.kernel_impl = kernel_impl
+        self.topk_default = topk_default
+        sizes = index.cluster_sizes()
+        self.tile_len = tile_len or max(128, int(-(-sizes.max() // 128) * 128))
+        self._jnp = jnp
+        self.cache_capacity = cache_capacity
+        if cache_capacity:
+            self._slab = np.zeros(
+                (cache_capacity, self.tile_len, index.dim), np.float32
+            )
+            self._slab_ids = np.full((cache_capacity, self.tile_len), -1, np.int64)
+            self._slab_valid = np.zeros((cache_capacity,), np.int32)
+        self.cache = HotClusterCache(
+            index.n_clusters,
+            cache_capacity,
+            update_interval=update_interval,
+            transit_substages=transit_substages,
+            loader=self._load_cluster if cache_capacity else None,
+        )
+        self._device_slab = None  # lazily mirrored jnp copy
+
+    # ------------------------------------------------------------- cache load
+    def _load_cluster(self, cid: int, slot: int) -> None:
+        lo, hi = int(self.index.offsets[cid]), int(self.index.offsets[cid + 1])
+        m = min(hi - lo, self.tile_len)
+        self._slab[slot, :] = 0.0
+        self._slab[slot, :m] = self.index.flat[lo : lo + m]
+        self._slab_ids[slot, :] = -1
+        self._slab_ids[slot, :m] = self.index.ids[lo : lo + m]
+        self._slab_valid[slot] = m
+        self._device_slab = None  # invalidate device mirror
+
+    def _device_arrays(self):
+        if self._device_slab is None:
+            self._device_slab = (
+                self._jnp.asarray(self._slab),
+                self._jnp.asarray(self._slab_valid),
+            )
+        return self._device_slab
+
+    # ---------------------------------------------------------------- search
+    def search_substage(
+        self, work: Sequence[tuple[np.ndarray, int, TopK]]
+    ) -> tuple[list[TopK], SubstageTiming]:
+        """Execute one sub-stage worth of (query, cluster, topk) items."""
+        timing = SubstageTiming()
+        out: list[Optional[TopK]] = [None] * len(work)
+        host_items: list[int] = []
+        dev_items: list[int] = []
+        for i, (_, cid, _) in enumerate(work):
+            (dev_items if self.cache.lookup(int(cid)) else host_items).append(i)
+
+        if dev_items:
+            t0 = time.perf_counter()
+            self._device_search([work[i] for i in dev_items], [out, dev_items])
+            timing.device_us = (time.perf_counter() - t0) * 1e6
+            timing.n_device_items = len(dev_items)
+
+        if host_items:
+            t0 = time.perf_counter()
+            res = self.index.search_cluster_batch([work[i] for i in host_items])
+            for i, r in zip(host_items, res):
+                out[i] = r
+            timing.host_us = (time.perf_counter() - t0) * 1e6
+            timing.n_host_items = len(host_items)
+
+        self.cache.end_substage()
+        return out, timing  # type: ignore[return-value]
+
+    def _device_search(self, items, sink) -> None:
+        """Pack resident-cluster items into (G, QB, d) groups + fused scan."""
+        from repro.kernels.ivf_scan import ivf_scan
+
+        out, idx_map = sink
+        jnp = self._jnp
+        slab, valid = self._device_arrays()
+        k = max(it[2].k for it in items)
+
+        # group by cluster slot, then chunk into QB-sized query groups
+        by_slot: dict[int, list[int]] = {}
+        for pos, (_, cid, _) in enumerate(items):
+            by_slot.setdefault(self.cache.slot_of(int(cid)), []).append(pos)
+        groups, gq, member = [], [], []
+        for slot, positions in by_slot.items():
+            for ofs in range(0, len(positions), QB):
+                chunk = positions[ofs : ofs + QB]
+                qs = np.zeros((QB, self.index.dim), np.float32)
+                for r, p in enumerate(chunk):
+                    qs[r] = items[p][0]
+                groups.append(slot)
+                gq.append(qs)
+                member.append(chunk)
+        q_groups = jnp.asarray(np.stack(gq))
+        g_slot = jnp.asarray(np.array(groups, np.int32))
+        dists, idx = ivf_scan(q_groups, g_slot, slab, valid, k, impl=self.kernel_impl)
+        dists = np.asarray(dists)
+        idx = np.asarray(idx)
+        for g, chunk in enumerate(member):
+            slot = groups[g]
+            for r, p in enumerate(chunk):
+                local = idx[g, r]
+                ids = np.where(local >= 0, self._slab_ids[slot][np.maximum(local, 0)], -1)
+                keep = ids >= 0
+                tk = items[p][2]
+                out[idx_map[p]] = tk.merge(dists[g, r][keep], ids[keep])
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        return {
+            "hit_rate": self.cache.stats.hit_rate,
+            "hits": self.cache.stats.hits,
+            "misses": self.cache.stats.misses,
+            "swaps": self.cache.stats.swaps,
+            "skew": self.cache.tracker.skewness_report(),
+        }
+
+
+def engine_from_memory_budget(
+    index: IVFIndex,
+    cache_bytes: int,
+    **kw,
+) -> HybridRetrievalEngine:
+    sizes = index.cluster_sizes()
+    tile_len = max(128, int(-(-sizes.max() // 128) * 128))
+    cap = capacity_from_bytes(cache_bytes, tile_len, index.dim)
+    cap = min(cap, index.n_clusters)
+    return HybridRetrievalEngine(index, cache_capacity=cap, tile_len=tile_len, **kw)

@@ -1,0 +1,64 @@
+"""Mini-batch-free Lloyd k-means in JAX (IVF training).
+
+Chunked assignment keeps the (N, K) distance matrix out of memory; the whole
+update is jitted with a fori_loop so index training for ~1e5..1e6 vectors
+stays fast on CPU and trivially maps to TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def assign_clusters(data: jax.Array, centroids: jax.Array, chunk: int = 8192):
+    """Returns (assignment (N,), min_dist (N,)) via chunked L2 argmin."""
+    N, d = data.shape
+    K = centroids.shape[0]
+    pad = (-N) % chunk
+    dp = jnp.pad(data, ((0, pad), (0, 0)))
+    nchunks = dp.shape[0] // chunk
+    c_sq = (centroids.astype(jnp.float32) ** 2).sum(-1)
+
+    def body(i, acc):
+        asn, dist = acc
+        x = lax.dynamic_slice_in_dim(dp, i * chunk, chunk, axis=0).astype(jnp.float32)
+        d2 = (x**2).sum(-1, keepdims=True) - 2.0 * x @ centroids.T.astype(jnp.float32) + c_sq
+        a = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+        m = jnp.min(d2, axis=-1)
+        asn = lax.dynamic_update_slice_in_dim(asn, a, i * chunk, axis=0)
+        dist = lax.dynamic_update_slice_in_dim(dist, m, i * chunk, axis=0)
+        return asn, dist
+
+    asn = jnp.zeros((dp.shape[0],), jnp.int32)
+    dist = jnp.zeros((dp.shape[0],), jnp.float32)
+    asn, dist = lax.fori_loop(0, nchunks, body, (asn, dist))
+    return asn[:N], dist[:N]
+
+
+@partial(jax.jit, static_argnames=("k", "iters", "chunk"))
+def kmeans(key: jax.Array, data: jax.Array, k: int, iters: int = 10, chunk: int = 8192):
+    """Lloyd iterations; dead centroids re-seeded from random points.
+
+    Returns (centroids (k, d), assignment (N,)).
+    """
+    N, d = data.shape
+    idx = jax.random.choice(key, N, shape=(k,), replace=False)
+    cent = data[idx].astype(jnp.float32)
+
+    def step(i, cent):
+        asn, _ = assign_clusters(data, cent, chunk=chunk)
+        sums = jax.ops.segment_sum(data.astype(jnp.float32), asn, num_segments=k)
+        cnts = jax.ops.segment_sum(jnp.ones((N,), jnp.float32), asn, num_segments=k)
+        new = sums / jnp.maximum(cnts, 1.0)[:, None]
+        # reseed empties deterministically from data points
+        reseed = data[(idx + i) % N].astype(jnp.float32)
+        return jnp.where((cnts > 0)[:, None], new, reseed)
+
+    cent = lax.fori_loop(0, iters, step, cent)
+    asn, _ = assign_clusters(data, cent, chunk=chunk)
+    return cent, asn

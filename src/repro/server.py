@@ -1,0 +1,92 @@
+"""HedraRAG Server façade (paper Listing 1):
+
+    from repro.server import Server
+    s = Server(index=..., embedder=..., mode="hedra")
+    s.add_request("What is RAG?", g1)
+    s.add_request("Compare RAG with long-context models.", g2)
+    metrics = s.run()
+
+The server owns admission (arrival times / Poisson open-loop), request-state
+journaling (fault tolerance: completed requests are replayable), and the
+wavefront scheduler + backend pair.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+from typing import Optional
+
+import numpy as np
+
+from repro.core.backends import SimBackend
+from repro.core.ragraph import RAGraph
+from repro.core.runtime import RequestContext
+from repro.core.wavefront import Metrics, SchedulerConfig, WavefrontScheduler
+from repro.serving.workload import WorkloadProfile
+
+
+class Server:
+    def __init__(
+        self,
+        index,
+        embedder,
+        *,
+        mode: str = "hedra",
+        backend=None,
+        config: Optional[SchedulerConfig] = None,
+        workload: Optional[WorkloadProfile] = None,
+        journal_path: Optional[str] = None,
+        **cfg_overrides,
+    ):
+        self.index = index
+        self.embedder = embedder
+        self.config = config or SchedulerConfig.preset(mode, **cfg_overrides)
+        self.backend = backend or SimBackend(index, embedder)
+        self.workload = workload or WorkloadProfile()
+        self.sched = WavefrontScheduler(self.backend, index, self.config,
+                                        self.workload)
+        self.journal_path = journal_path
+        self._ids = itertools.count()
+
+    # ------------------------------------------------------------------ API
+    def add_request(self, input_text: str, graph: RAGraph,
+                    arrival_us: float = 0.0) -> int:
+        rid = next(self._ids)
+        graph.validate()
+        state = {"input": input_text,
+                 "_target_rounds": self.workload.iterations(rid)}
+        req = RequestContext(request_id=rid, graph=graph, state=state,
+                             arrival_us=float(arrival_us))
+        self.sched.add_request(req)
+        return rid
+
+    def run(self, max_time_us: float = 4e9) -> Metrics:
+        m = self.sched.run(max_time_us=max_time_us)
+        if self.journal_path:
+            self.write_journal(self.journal_path)
+        return m
+
+    # ------------------------------------------------------- fault tolerance
+    def write_journal(self, path: str) -> None:
+        """Request journal: enough to replay / resume after a crash."""
+        rows = []
+        for r in self.sched.done + self.sched.active + self.sched.pending:
+            rows.append({
+                "request_id": r.request_id,
+                "graph": r.graph.name,
+                "input": r.state.get("input"),
+                "arrival_us": r.arrival_us,
+                "finished": r.finished,
+                "finish_us": r.finish_us,
+                "events": [(t, e) for t, e, _ in r.events],
+            })
+        with open(path, "w") as f:
+            json.dump(rows, f)
+
+    @staticmethod
+    def replay_unfinished(path: str) -> list[dict]:
+        """Requests that must be re-admitted after restart."""
+        with open(path) as f:
+            rows = json.load(f)
+        return [r for r in rows if not r["finished"]]

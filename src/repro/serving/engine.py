@@ -1,0 +1,148 @@
+"""Slab-based continuous-batching generation engine (real execution mode).
+
+The engine owns a fixed pool of ``max_batch`` sequence slots backed by one
+decode-state pytree (``lm.init_decode_state``), so a decode step is a single
+jitted call over the whole slab — the vLLM-style step() the wavefront
+scheduler drives.  Sequences join via per-sequence prefill (bucketed padding
+to bound recompilation) whose state is scattered into a free slot, and leave
+when EOS/max-token hits, freeing the slot for the next request: continuous
+batching.
+
+This engine is what RealBackend binds to; the multi-pod serving path jits
+the same ``decode_step`` over the production mesh (launch/serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.serving.sampler import SamplerConfig, sample
+
+
+@dataclasses.dataclass
+class Sequence:
+    seq_id: int
+    slot: int
+    prompt_len: int
+    max_new: int
+    tokens: list  # generated tokens
+    done: bool = False
+
+
+def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return -(-n // 2048) * 2048
+
+
+class GenerationEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_len: int = 512, eos_id: int = 0,
+                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.sampler = sampler
+        self.state = lm.init_decode_state(cfg, max_batch, max_len)
+        self.free_slots = list(range(max_batch))
+        self.seqs: dict[int, Sequence] = {}
+        self._next_id = 0
+        self._key = jax.random.PRNGKey(seed)
+        self._last_tokens = jnp.zeros((max_batch,), jnp.int32)
+        self._active = np.zeros((max_batch,), bool)
+
+        self._prefill = jax.jit(
+            lambda p, t: lm.prefill(p, cfg, t, max_len=max_len),
+            static_argnames=(),
+        )
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+
+    # ------------------------------------------------------------- internals
+    def _decode_impl(self, params, state, tokens, key, active):
+        logits, state = lm.decode_step(params, self.cfg, tokens, state)
+        nxt = sample(logits, key, self.sampler)
+        # frozen slots keep emitting pad; their cache_len must not grow
+        state["cache_len"] = jnp.where(active, state["cache_len"],
+                                       state["cache_len"] - 1)
+        return nxt, state
+
+    def _insert_impl(self, slab_state, one_state, slot):
+        def ins(slab, one):
+            if slab.ndim == 1:  # cache_len (B,)
+                return slab.at[slot].set(one[0])
+            # (L, B, ...) vs (L, 1, ...)
+            return jax.lax.dynamic_update_slice_in_dim(slab, one.astype(slab.dtype), slot, axis=1)
+
+        return jax.tree.map(ins, slab_state, one_state)
+
+    # ------------------------------------------------------------------ API
+    def can_admit(self) -> bool:
+        return bool(self.free_slots)
+
+    def add_sequence(self, prompt_tokens: np.ndarray, max_new: int = 64) -> int:
+        """Prefill a prompt into a free slot; returns seq id."""
+        if not self.free_slots:
+            raise RuntimeError("no free slots")
+        slot = self.free_slots.pop()
+        n = len(prompt_tokens)
+        pad_to = min(_bucket(n), self.max_len)
+        toks = np.zeros((1, pad_to), np.int32)
+        toks[0, pad_to - n:] = prompt_tokens  # left-pad (simplest causal-safe)
+        logits, st1 = self._prefill(self.params, jnp.asarray(toks))
+        self.state = self._insert(self.state, st1, slot)
+        # note: left-padding slightly pollutes the prefix; acceptable for the
+        # toy-model integration path (real deployment uses paged prefill)
+        first = int(jnp.argmax(logits[0]))
+        sid = self._next_id
+        self._next_id += 1
+        self.seqs[sid] = Sequence(sid, slot, n, max_new, [first])
+        self._active[slot] = True
+        lt = np.array(self._last_tokens)
+        lt[slot] = first
+        self._last_tokens = jnp.asarray(lt)
+        return sid
+
+    def step(self) -> dict[int, int]:
+        """One decode step over the slab; returns {seq_id: new_token}."""
+        if not self.seqs:
+            return {}
+        self._key, sub = jax.random.split(self._key)
+        active = jnp.asarray(self._active)
+        nxt, self.state = self._decode(self.params, self.state,
+                                       self._last_tokens, sub, active)
+        self._last_tokens = nxt
+        out: dict[int, int] = {}
+        nxt_np = np.asarray(nxt)
+        for sid, seq in list(self.seqs.items()):
+            if seq.done:
+                continue
+            tok = int(nxt_np[seq.slot])
+            seq.tokens.append(tok)
+            out[sid] = tok
+            if tok == self.eos_id or len(seq.tokens) >= seq.max_new:
+                seq.done = True
+                self._active[seq.slot] = False
+                self.free_slots.append(seq.slot)
+                del self.seqs[sid]
+        return out
+
+    def step_batch(self, n_steps: int) -> None:
+        for _ in range(n_steps):
+            if not self.seqs:
+                return
+            self.step()
+
+    @property
+    def batch_size(self) -> int:
+        return len(self.seqs)

@@ -1,0 +1,24 @@
+"""Token sampling: greedy / temperature / top-k (pure JAX, jit-safe)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0  # 0 -> greedy
+    top_k: int = 0  # 0 -> full softmax
+
+
+def sample(logits: jax.Array, key: jax.Array, cfg: SamplerConfig) -> jax.Array:
+    """logits (B, V) -> tokens (B,) int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l = logits / cfg.temperature
+    if cfg.top_k:
+        kth = jax.lax.top_k(l, cfg.top_k)[0][..., -1:]
+        l = jnp.where(l < kth, -jnp.inf, l)
+    return jax.random.categorical(key, l, axis=-1).astype(jnp.int32)

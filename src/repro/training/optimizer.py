@@ -1,0 +1,80 @@
+"""AdamW with global-norm clipping and warmup-cosine schedule (pure JAX)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def init_opt_state(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, f32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def schedule(cfg: OptConfig, step) -> jax.Array:
+    step = step.astype(f32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(f32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(cfg: OptConfig, params, grads, opt_state):
+    """Returns (new_params, new_opt_state, stats)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.betas
+    bc1 = 1.0 - b1 ** step.astype(f32)
+    bc2 = 1.0 - b2 ** step.astype(f32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(f32) * scale
+        mu2 = b1 * mu + (1 - b1) * g
+        nu2 = b2 * nu + (1 - b2) * g * g
+        mhat = mu2 / bc1
+        nhat = nu2 / bc2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * p.astype(f32)
+        return (p.astype(f32) - lr * delta).astype(p.dtype), mu2, nu2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+    new = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(tdef, [x[0] for x in new])
+    new_mu = jax.tree.unflatten(tdef, [x[1] for x in new])
+    new_nu = jax.tree.unflatten(tdef, [x[2] for x in new])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, {
+        "grad_norm": gnorm, "lr": lr,
+    }

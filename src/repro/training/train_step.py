@@ -1,0 +1,65 @@
+"""The jitted training step (loss -> grads -> AdamW), microbatch-capable."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.training.optimizer import OptConfig, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[OptConfig] = None,
+                    microbatch: int = 0):
+    """Returns train_step(params, opt_state, batch) -> (loss, params, opt).
+
+    ``microbatch`` > 0 splits the batch into that many sequential gradient
+    accumulation slices (scan) — activation memory drops by the same factor
+    while keeping arithmetic identical.
+    """
+    opt_cfg = opt_cfg or OptConfig()
+
+    def loss_fn(params, batch):
+        return lm.train_loss(params, cfg, batch)
+
+    def grads_of(params, batch):
+        if not microbatch or microbatch <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def slice_batch(b, i):
+            return jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(
+                    x, i * (x.shape[0] // microbatch), x.shape[0] // microbatch, 0
+                ),
+                b,
+            )
+
+        def body(carry, i):
+            acc_loss, acc_g = carry
+            l, g = jax.value_and_grad(loss_fn)(params, slice_batch(batch, i))
+            acc_g = jax.tree.map(jnp.add, acc_g, g)
+            return (acc_loss + l, acc_g), None
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        init = (jnp.zeros((), jnp.float32), zero_g)
+        if cfg.unroll_scans:
+            # cost-analysis variants: while-loop bodies are counted once by
+            # XLA, so the accumulation loop must be unrolled (see dryrun.py)
+            carry = init
+            for i in range(microbatch):
+                carry, _ = body(carry, jnp.int32(i))
+            tot, g = carry
+        else:
+            (tot, g), _ = jax.lax.scan(body, init, jnp.arange(microbatch))
+        inv = 1.0 / microbatch
+        return tot * inv, jax.tree.map(lambda x: x * inv, g)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        params, opt_state, stats = adamw_update(opt_cfg, params, grads, opt_state)
+        return loss, params, opt_state, stats
+
+    return train_step

@@ -1,0 +1,107 @@
+"""The paper's five evaluation workflows as RAGraphs (§6.1).
+
+  one-shot   retrieve -> generate
+  multistep  decompose -> [retrieve -> answer] x subquestions (conditional loop)
+  irg        [generate -> retrieve] x N iterative retrieval-generation
+  hyde       hypothesis-generate -> retrieve(with hypothesis) -> answer
+  recomp     retrieve -> compress -> answer (post-retrieval stage)
+
+The conditional loops terminate through per-request state counters, which is
+how the paper's Listing 1 lambda edges resolve at runtime.  ``max_rounds``
+caps iteration; the workload profile decides the actual per-request rounds
+(written into state at admission by the Server).
+"""
+from __future__ import annotations
+
+from repro.core.ragraph import END, START, RAGraph
+
+
+def one_shot(topk: int = 5) -> RAGraph:
+    g = RAGraph("one-shot")
+    g.add_retrieval(0, query="input", output="docs", topk=topk)
+    g.add_generation(1, prompt="Answer {input} using {docs}.", output="answer")
+    g.add_edge(START, 0)
+    g.add_edge(0, 1)
+    g.add_edge(1, END)
+    return g
+
+
+def hyde(topk: int = 5) -> RAGraph:
+    g = RAGraph("hyde")
+    g.add_generation(0, prompt="Generate a hypothesis for {input}.",
+                     output="hypopara", max_tokens=128)
+    g.add_retrieval(1, query="hypopara", output="docs", topk=topk)
+    g.add_generation(2, prompt="Answer {input} using {docs}.", output="answer")
+    g.add_edge(START, 0)
+    g.add_edge(0, 1)
+    g.add_edge(1, 2)
+    g.add_edge(2, END)
+    return g
+
+
+def recomp(topk: int = 8) -> RAGraph:
+    g = RAGraph("recomp")
+    g.add_retrieval(0, query="input", output="docs", topk=topk)
+    g.add_generation(1, prompt="Compress {docs} for {input}.",
+                     output="summary", max_tokens=96)
+    g.add_generation(2, prompt="Answer {input} using {summary}.", output="answer")
+    g.add_edge(START, 0)
+    g.add_edge(0, 1)
+    g.add_edge(1, 2)
+    g.add_edge(2, END)
+    return g
+
+
+def multistep(topk: int = 2) -> RAGraph:
+    """Decompose into subquestions, answer each with its own retrieval."""
+    g = RAGraph("multistep")
+    g.add_generation(0, prompt="Decompose {input} into subquestions.",
+                     output="subquestion", max_tokens=96)
+    g.add_retrieval(1, query="subquestion", output="docs", topk=topk)
+    g.add_generation(2, prompt="Answer {subquestion} using {docs}.",
+                     output="subanswer")
+
+    def loop(state: dict):
+        state["_round"] = state.get("_round", 0) + 1
+        return 1 if state["_round"] < state.get("_target_rounds", 2) else END
+
+    g.add_edge(START, 0)
+    g.add_edge(0, 1)
+    g.add_edge(1, 2)
+    g.add_edge(2, loop)
+    return g
+
+
+def irg(topk: int = 5) -> RAGraph:
+    """Iterative retrieval-generation synergy (IRG / ITER-RETGEN)."""
+    g = RAGraph("irg")
+    g.add_generation(0, prompt="Draft an answer for {input}.",
+                     output="draft", max_tokens=128)
+    g.add_retrieval(1, query="draft", output="docs", topk=topk)
+    g.add_generation(2, prompt="Refine {draft} for {input} using {docs}.",
+                     output="draft")
+
+    def loop(state: dict):
+        state["_round"] = state.get("_round", 0) + 1
+        return 1 if state["_round"] < state.get("_target_rounds", 2) else END
+
+    g.add_edge(START, 0)
+    g.add_edge(0, 1)
+    g.add_edge(1, 2)
+    g.add_edge(2, loop)
+    return g
+
+
+WORKFLOWS = {
+    "one-shot": one_shot,
+    "hyde": hyde,
+    "recomp": recomp,
+    "multistep": multistep,
+    "irg": irg,
+}
+
+
+def build(name: str, **kw) -> RAGraph:
+    g = WORKFLOWS[name](**kw)
+    g.validate()
+    return g

@@ -1,0 +1,35 @@
+import os
+import sys
+
+# smoke tests must see exactly 1 device (the dry-run sets its own flags in a
+# separate process); make sure nothing leaks in
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    from repro.retrieval import CorpusConfig, make_corpus
+
+    cfg = CorpusConfig(n_docs=12000, dim=48, n_topics=96, zipf_alpha=1.2, seed=0)
+    return make_corpus(cfg)
+
+
+@pytest.fixture(scope="session")
+def small_index(small_corpus):
+    from repro.retrieval import IVFIndex
+
+    docs, _, _ = small_corpus
+    return IVFIndex.build(docs, 48, iters=4)
+
+
+@pytest.fixture(scope="session")
+def embedder(small_corpus):
+    from repro.retrieval import SyntheticEmbedder
+
+    _, _, topics = small_corpus
+    return SyntheticEmbedder(topics)

@@ -1,0 +1,157 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles,
+executed in interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.ivf_scan.ivf_scan import ivf_scan_pallas
+from repro.kernels.ivf_scan.ref import ivf_scan_ref
+
+
+@pytest.mark.parametrize("G,QB,d,C,L,k,lb", [
+    (2, 8, 32, 4, 512, 5, 256),
+    (4, 8, 64, 6, 1024, 10, 512),
+    (1, 16, 128, 3, 256, 20, 128),
+    (3, 8, 48, 5, 384, 1, 128),
+])
+def test_ivf_scan_shapes(G, QB, d, C, L, k, lb):
+    rng = np.random.default_rng(G * 100 + k)
+    q = jnp.asarray(rng.standard_normal((G, QB, d)), jnp.float32)
+    slab = jnp.asarray(rng.standard_normal((C, L, d)), jnp.float32)
+    valid = jnp.asarray(rng.integers(1, L + 1, size=(C,)), jnp.int32)
+    gc = jnp.asarray(rng.integers(0, C, size=(G,)), jnp.int32)
+    dr, ir = ivf_scan_ref(q, gc, slab, valid, k)
+    dp, ip = ivf_scan_pallas(q, gc, slab, valid, k, lb=lb, interpret=True)
+    dr, ir, dp, ip = map(np.asarray, (dr, ir, dp, ip))
+    fin = np.isfinite(dr)
+    assert np.array_equal(fin, np.isfinite(dp))
+    np.testing.assert_allclose(dr[fin], dp[fin], rtol=1e-4, atol=1e-5)
+    assert np.array_equal(ir, ip)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ivf_scan_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    G, QB, d, C, L, k = 2, 8, 64, 4, 512, 8
+    q = jnp.asarray(rng.standard_normal((G, QB, d)), dtype)
+    slab = jnp.asarray(rng.standard_normal((C, L, d)), dtype)
+    valid = jnp.asarray(rng.integers(1, L + 1, size=(C,)), jnp.int32)
+    gc = jnp.asarray(rng.integers(0, C, size=(G,)), jnp.int32)
+    dr, _ = ivf_scan_ref(q, gc, slab, valid, k)
+    dp, _ = ivf_scan_pallas(q, gc, slab, valid, k, lb=256, interpret=True)
+    fin = np.isfinite(np.asarray(dr))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(dr)[fin], np.asarray(dp)[fin],
+                               rtol=tol, atol=tol)
+
+
+def test_ivf_scan_duplicate_distances():
+    """k-pass selection must pick the first index on ties (stable order)."""
+    G, QB, d, C, L, k = 1, 8, 16, 1, 256, 4
+    q = jnp.zeros((G, QB, d), jnp.float32)
+    slab = jnp.ones((C, L, d), jnp.float32)  # all rows identical
+    valid = jnp.asarray([L], jnp.int32)
+    gc = jnp.asarray([0], jnp.int32)
+    dp, ip = ivf_scan_pallas(q, gc, slab, valid, k, lb=128, interpret=True)
+    assert np.array_equal(np.asarray(ip)[0, 0], np.arange(k))
+
+
+@pytest.mark.parametrize("B,H,KV,dh,S,sb", [
+    (2, 8, 4, 64, 512, 256),
+    (2, 16, 8, 128, 1024, 512),
+    (1, 10, 1, 256, 512, 128),   # MQA, head pad
+    (2, 32, 32, 96, 256, 256),   # MHA, odd head dim
+])
+def test_decode_attention_shapes(B, H, KV, dh, S, sb):
+    rng = np.random.default_rng(B * 10 + H)
+    q = jnp.asarray(rng.standard_normal((B, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, dh)), jnp.float32) * 0.3
+    v = jnp.asarray(rng.standard_normal((B, S, KV, dh)), jnp.float32)
+    lengths = jnp.asarray(rng.integers(1, S + 1, size=(B,)), jnp.int32)
+    ref = decode_attention_ref(q, k, v, lengths)
+    out = decode_attention(q, k, v, lengths, impl="interpret", sb=sb)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_bf16():
+    rng = np.random.default_rng(5)
+    B, H, KV, dh, S = 2, 8, 4, 64, 512
+    q = jnp.asarray(rng.standard_normal((B, H, dh)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, dh)), jnp.bfloat16) * 0.3
+    v = jnp.asarray(rng.standard_normal((B, S, KV, dh)), jnp.bfloat16)
+    lengths = jnp.asarray([S, S // 2], jnp.int32)
+    ref = decode_attention_ref(q, k, v, lengths).astype(jnp.float32)
+    out = decode_attention(q, k, v, lengths, impl="interpret", sb=256).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out), rtol=3e-2, atol=3e-2)
+
+
+def test_decode_attention_length_one():
+    """Edge: a sequence with exactly one valid cache entry."""
+    B, H, KV, dh, S = 2, 4, 4, 64, 256
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.standard_normal((B, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, dh)), jnp.float32)
+    lengths = jnp.asarray([1, S], jnp.int32)
+    ref = decode_attention_ref(q, k, v, lengths)
+    out = decode_attention(q, k, v, lengths, impl="interpret", sb=128)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# topk_merge kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("Q,k,m,qb", [
+    (16, 5, 12, 8), (8, 10, 10, 8), (24, 20, 4, 8), (8, 1, 16, 8),
+])
+def test_topk_merge_shapes(Q, k, m, qb):
+    from repro.kernels.topk_merge.ref import topk_merge_ref
+    from repro.kernels.topk_merge.topk_merge import topk_merge_pallas
+
+    rng = np.random.default_rng(Q + k)
+    rd = np.sort(rng.random((Q, k)).astype(np.float32), axis=1)
+    rd[:, k // 2:] = np.inf  # half-filled scoreboards
+    ri = rng.integers(0, 1_000_000, (Q, k)).astype(np.int32)
+    cd = rng.random((Q, m)).astype(np.float32)
+    ci = (rng.integers(0, 1_000_000, (Q, m)) + 2_000_000).astype(np.int32)
+    dr, ir = topk_merge_ref(jnp.asarray(rd), jnp.asarray(ri),
+                            jnp.asarray(cd), jnp.asarray(ci))
+    dp, ip = topk_merge_pallas(jnp.asarray(rd), jnp.asarray(ri),
+                               jnp.asarray(cd), jnp.asarray(ci),
+                               qb=qb, interpret=True)
+    dr, ir, dp, ip = map(np.asarray, (dr, ir, dp, ip))
+    fin = np.isfinite(dr)
+    assert np.array_equal(fin, np.isfinite(dp))
+    np.testing.assert_allclose(dr[fin], dp[fin], rtol=1e-6)
+    # ids must match wherever distances are unique
+    uniq = fin & (np.abs(np.diff(np.pad(dr, ((0, 0), (1, 0)), constant_values=-1),
+                                 axis=1)) > 1e-9)
+    np.testing.assert_array_equal(ir[uniq], ip[uniq])
+
+
+def test_topk_merge_semantics_match_topk_class():
+    """Kernel merge == retrieval.TopK.merge on the same data."""
+    from repro.kernels.topk_merge.ops import topk_merge
+    from repro.retrieval.ivf import TopK
+
+    rng = np.random.default_rng(3)
+    k, m = 6, 9
+    tk = TopK.empty(k).merge(rng.random(5).astype(np.float32),
+                             np.arange(5, dtype=np.int64))
+    cd = rng.random(m).astype(np.float32)
+    ci = np.arange(100, 100 + m, dtype=np.int64)
+    want = tk.merge(cd, ci)
+    dp, ip = topk_merge(jnp.asarray(tk.dists[None]),
+                        jnp.asarray(tk.ids[None].astype(np.int32)),
+                        jnp.asarray(cd[None]),
+                        jnp.asarray(ci[None].astype(np.int32)),
+                        impl="interpret")
+    got_d, got_i = np.asarray(dp)[0], np.asarray(ip)[0]
+    fin = np.isfinite(want.dists)
+    np.testing.assert_allclose(got_d[fin], want.dists[fin], rtol=1e-6)
+    np.testing.assert_array_equal(got_i[fin], want.ids[fin].astype(np.int32))

@@ -1,0 +1,113 @@
+"""Hypothesis property-based tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis.hlo import collective_stats
+from repro.core.substage import TimeBudget
+from repro.retrieval.ivf import TopK
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+@given(
+    st.lists(
+        st.tuples(
+            st.lists(st.floats(0, 1e6, allow_nan=False, width=32), min_size=1, max_size=12),
+            st.integers(0, 10_000),
+        ),
+        min_size=1,
+        max_size=8,
+    ),
+    st.integers(1, 8),
+)
+def test_topk_merge_equals_global_sort(batches, k):
+    """Any merge order of candidate batches == global top-k of the union."""
+    tk = TopK.empty(k)
+    all_d, all_i = [], []
+    base = 0
+    for dists, seed in batches:
+        ids = np.arange(base, base + len(dists))  # unique ids
+        base += len(dists)
+        tk = tk.merge(np.asarray(dists, np.float32), ids)
+        all_d.extend(dists)
+        all_i.extend(ids)
+    order = np.argsort(np.asarray(all_d, np.float32), kind="stable")[:k]
+    expect_d = np.asarray(all_d, np.float32)[order]
+    got = tk.dists[tk.ids >= 0]
+    np.testing.assert_allclose(got, expect_d[: len(got)], rtol=1e-6)
+
+
+@given(st.floats(1.0, 1e7), st.floats(0.1, 1e5))
+def test_eq1_budget_is_argmax(t_ret, beta):
+    """mb* = sqrt(2 t beta) maximises the corrected Delta_l objective."""
+    b = TimeBudget(beta_us=beta, t_retrieval_us=t_ret,
+                   min_budget_us=0.0, max_budget_us=1e12)
+    mb = b.mb_us
+    tol = 1e-9 * max(1.0, abs(b.delta_l(mb)), t_ret, beta)
+    for factor in (0.5, 0.9, 1.1, 2.0):
+        assert b.delta_l(mb) >= b.delta_l(mb * factor) - tol
+
+
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(1, 16))
+def test_budget_monotone_in_inputs(t_scale, beta_scale, _):
+    b1 = TimeBudget(beta_us=10.0 * beta_scale, t_retrieval_us=1000.0 * t_scale,
+                    min_budget_us=0, max_budget_us=1e12)
+    b2 = TimeBudget(beta_us=10.0 * beta_scale, t_retrieval_us=2000.0 * t_scale,
+                    min_budget_us=0, max_budget_us=1e12)
+    assert b2.mb_us >= b1.mb_us  # more retrieval work -> larger sub-stages
+
+
+@given(
+    st.lists(
+        st.tuples(
+            st.sampled_from(["all-reduce", "all-gather", "reduce-scatter",
+                             "all-to-all", "collective-permute"]),
+            st.sampled_from(["f32", "bf16", "s32"]),
+            st.lists(st.integers(1, 64), min_size=1, max_size=3),
+        ),
+        min_size=0,
+        max_size=10,
+    )
+)
+def test_collective_parser_sums_operands(ops):
+    """Parser must sum operand bytes exactly on synthetic HLO."""
+    bytes_of = {"f32": 4, "bf16": 2, "s32": 4}
+    lines = ["HloModule m", "ENTRY main {"]
+    expect = 0
+    for i, (op, dt, dims) in enumerate(ops):
+        shape = f"{dt}[{','.join(map(str, dims))}]"
+        n = int(np.prod(dims)) * bytes_of[dt]
+        lines.append(f"  %p{i} = {shape} parameter({i})")
+        lines.append(f"  %c{i} = {shape} {op}(%p{i}), replica_groups={{}}")
+        expect += n
+    lines.append("}")
+    stats = collective_stats("\n".join(lines))
+    assert stats.total_bytes == expect
+    # bf16 correction only halves the f32 part
+    f32_expected = sum(
+        int(np.prod(d)) * 4 for op, dt, d in ops if dt == "f32"
+    )
+    assert stats.f32_bytes == f32_expected
+
+
+@given(st.integers(2, 2048), st.integers(1, 32))
+def test_moe_capacity_padding(T, k):
+    from repro.configs import get_config
+    from repro.models.layers import moe_capacity
+
+    cfg = get_config("deepseek-v2-lite-16b").reduced()
+    C = moe_capacity(cfg, T)
+    assert C % 8 == 0
+    assert C * cfg.n_experts >= T * cfg.moe_top_k  # capacity_factor >= 1
+
+
+@given(st.lists(st.integers(0, 47), min_size=1, max_size=40))
+def test_access_tracker_top_is_sorted(accesses):
+    from repro.retrieval.hotcache import AccessTracker
+
+    tr = AccessTracker(48)
+    tr.record(np.asarray(accesses))
+    top = tr.top(8)
+    freqs = tr.freq[top]
+    assert (np.diff(freqs) <= 1e-12).all()
