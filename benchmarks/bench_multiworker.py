@@ -1,0 +1,48 @@
+"""Multi-worker retrieval scaling: throughput + p95 for a 1/2/4/8-worker
+retrieval pool under Zipf(1.2)-skewed cluster popularity, vs the
+single-worker baseline, plus the per-worker utilization skew reported by
+``Metrics.summary()`` and a dispatch-policy comparison at 4 workers."""
+from __future__ import annotations
+
+from benchmarks.common import emit, fixture, load_requests
+from repro.core.backends import SimBackend
+from repro.core.wavefront import SchedulerConfig
+from repro.retrieval.ivf import ClusterCostModel
+from repro.server import Server
+
+# deeper clusters than PAPER_COST so one retrieval worker saturates
+# (nw=1 ret_util ~0.9) — the regime where the pool has to help
+RET_BOUND = ClusterCostModel(fixed_us=150.0, per_vector_us=20.0, per_query_us=2.0)
+
+
+def _serve(index, embedder, nw: int, policy: str, n: int, rate: float):
+    cfg = SchedulerConfig.preset("hedra", num_ret_workers=nw,
+                                 dispatch_policy=policy, nprobe=16, topk=5)
+    be = SimBackend(index, embedder, cost_model=RET_BOUND)
+    s = Server(index, embedder, backend=be, config=cfg)
+    load_requests(s, n, rate, seed=4)
+    return s.run().summary()
+
+
+def run(quick: bool = True) -> None:
+    index, embedder = fixture(zipf=1.2)
+    n = 40 if quick else 80
+    rate = 40.0
+    workers = [1, 4] if quick else [1, 2, 4, 8]
+    base_rps = None
+    for nw in workers:
+        m = _serve(index, embedder, nw, "affinity", n, rate)
+        if base_rps is None:
+            base_rps = m["throughput_rps"]
+        emit(f"multiworker_affinity_nw{nw}", m["avg_latency_ms"] * 1e3,
+             f"rps={m['throughput_rps']:.2f}"
+             f"_p95_ms={m['p95_latency_ms']:.1f}"
+             f"_speedup={m['throughput_rps'] / base_rps:.2f}x"
+             f"_ret_util={m['ret_util']:.2f}"
+             f"_worker_skew={m['ret_worker_skew']:.2f}")
+    for policy in ([] if quick else ["least_loaded", "round_robin"]):
+        m = _serve(index, embedder, 4, policy, n, rate)
+        emit(f"multiworker_{policy}_nw4", m["avg_latency_ms"] * 1e3,
+             f"rps={m['throughput_rps']:.2f}"
+             f"_speedup={m['throughput_rps'] / base_rps:.2f}x"
+             f"_worker_skew={m['ret_worker_skew']:.2f}")

@@ -21,6 +21,7 @@ MODULES = [
     ("online", "benchmarks.bench_online"),            # Fig. 12
     ("offline", "benchmarks.bench_offline"),          # Fig. 13
     ("concurrent", "benchmarks.bench_concurrent"),    # Fig. 14
+    ("multiworker", "benchmarks.bench_multiworker"),  # retrieval-pool scaling
     ("speculation", "benchmarks.bench_speculation"),  # Fig. 17
     ("kernels", "benchmarks.bench_kernels"),          # roofline kernels
 ]

@@ -56,8 +56,22 @@ class SimBackend:
         self.device_launch_us = device_launch_us
         self.straggler_prob = straggler_prob
         self.straggler_factor = straggler_factor
+        self.seed = seed
         self._rng = np.random.default_rng(seed)
         self._sizes = index.cluster_sizes()
+        # per-retrieval-worker timing state: independent straggler streams +
+        # accumulated busy time, so multi-worker runs expose per-worker
+        # stragglers and utilization skew
+        self._worker_rng: dict[int, np.random.Generator] = {}
+        self.worker_busy_us: dict[int, float] = {}
+
+    def _rng_for_worker(self, worker_id: int) -> np.random.Generator:
+        rng = self._worker_rng.get(worker_id)
+        if rng is None:
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, worker_id + 1]))
+            self._worker_rng[worker_id] = rng
+        return rng
 
     # ----------------------------------------------------------- embeddings
     def query_embedding(self, req, round_idx: int) -> np.ndarray:
@@ -75,7 +89,8 @@ class SimBackend:
 
     # ------------------------------------------------------------- retrieval
     def search_charged(
-        self, work: Sequence[tuple[np.ndarray, int, TopK]]
+        self, work: Sequence[tuple[np.ndarray, int, TopK]],
+        worker_id: int = 0,
     ) -> tuple[float, Callable[[], list]]:
         """Returns (charged_us, results_fn).  results_fn() -> per-item
         (dists, ids) candidate arrays (per-cluster top-k)."""
@@ -98,6 +113,8 @@ class SimBackend:
         if n_dev:
             dev_us += self.device_launch_us
         charge = max(host_us, dev_us)
+        self.worker_busy_us[worker_id] = (
+            self.worker_busy_us.get(worker_id, 0.0) + charge)
 
         # --- execute exactly (records accesses, drives cache updates)
         def results_fn(work=tuple(work)) -> list:
@@ -111,10 +128,20 @@ class SimBackend:
         return charge, results_fn
 
     # ------------------------------------------------------ fault injection
-    def maybe_straggle(self, dur: float) -> float:
-        if self.straggler_prob and self._rng.random() < self.straggler_prob:
+    def maybe_straggle(self, dur: float, worker_id: int = -1) -> float:
+        """Per-worker straggler streams: worker_id -1 is the generation
+        worker; retrieval workers draw from independent seeded streams so a
+        slow worker in one pool slot does not perturb the others."""
+        if self.straggler_prob and self._rng_for_worker(worker_id).random() < self.straggler_prob:
             return dur * self.straggler_factor
         return dur
+
+    def worker_report(self) -> dict:
+        """Per-retrieval-worker *modeled charge* (us) accumulated by
+        search_charged, before straggler injection/mitigation and including
+        speculative warmup items.  The scheduler-side wall occupancy (after
+        mitigation) lives in ``Metrics.ret_busy_per_worker``."""
+        return dict(sorted(self.worker_busy_us.items()))
 
     # -------------------------------------------------------- calibration
     @classmethod
@@ -135,6 +162,7 @@ class RealBackend:
         self.hybrid = hybrid or HybridRetrievalEngine(index, cache_capacity=0)
         self.cluster_cost_model = ClusterCostModel.calibrate(index)
         self._sizes = index.cluster_sizes()
+        self.worker_busy_us: dict[int, float] = {}
 
     def query_embedding(self, req, round_idx: int) -> np.ndarray:
         return self.embedder.embed_query(req.request_id, round_idx)
@@ -149,7 +177,7 @@ class RealBackend:
         self.gen_engine.step_batch(n_steps)
         return (time.perf_counter() - t0) * 1e6
 
-    def search_charged(self, work):
+    def search_charged(self, work, worker_id: int = 0):
         if not work:
             return 0.0, lambda: []
         t0 = time.perf_counter()
@@ -157,7 +185,12 @@ class RealBackend:
         res, timing = self.hybrid.search_substage(base)
         out = [(r.dists[r.ids >= 0], r.ids[r.ids >= 0]) for r in res]
         measured = (time.perf_counter() - t0) * 1e6
+        self.worker_busy_us[worker_id] = (
+            self.worker_busy_us.get(worker_id, 0.0) + measured)
         return measured, lambda: out
 
-    def maybe_straggle(self, dur: float) -> float:
+    def maybe_straggle(self, dur: float, worker_id: int = -1) -> float:
         return dur
+
+    def worker_report(self) -> dict:
+        return dict(sorted(self.worker_busy_us.items()))

@@ -37,6 +37,7 @@ class GenProgress:
     started_at: float = -1.0
     speculative_src: Optional[str] = None  # sub-node id speculation is based on
     spec_basis: Optional[np.ndarray] = None  # partial top-k ids used to start
+    node_id: Optional[int] = None  # generation node this progress belongs to
 
     @property
     def done(self) -> bool:
@@ -78,6 +79,7 @@ class RequestContext:
     graph: RAGraph
     state: dict  # workflow variables ({"input": ..., outputs of nodes, ...})
     arrival_us: float = 0.0
+    slo_us: float = 0.0  # per-request latency SLO; 0 -> scheduler default
     current: Optional[int] = None  # active node id; None before START/after END
     finished: bool = False
     finish_us: float = -1.0

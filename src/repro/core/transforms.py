@@ -130,7 +130,8 @@ def add_speculative_generation(dag: RuntimeDAG, req: RequestContext,
 
     req.gen = GenProgress(target_tokens=target_tokens,
                           speculative_src=basis.sid,
-                          spec_basis=req.ret.topk.ids.copy())
+                          spec_basis=req.ret.topk.ids.copy(),
+                          node_id=target_node.node_id)
     sn = split_generation_next(dag, req, budget, speculative=True,
                                deps={basis.sid})
     dag.add_spec_edge(basis, sn)
@@ -156,8 +157,8 @@ def validate_or_rollback(dag: RuntimeDAG, req: RequestContext,
     for sn in list(dag.subnodes.values()):
         if sn.req is req and sn.kind == "gen" and sn.speculative:
             dag.invalidate(sn)
-    tgt = req.gen.target_tokens
+    tgt, nid = req.gen.target_tokens, req.gen.node_id
     from repro.core.runtime import GenProgress
 
-    req.gen = GenProgress(target_tokens=tgt)
+    req.gen = GenProgress(target_tokens=tgt, node_id=nid)
     return False

@@ -1,15 +1,18 @@
-"""Wavefront scheduler + hybrid two-worker serving loop (paper §4.5, §5).
+"""Wavefront scheduler + hybrid serving loop (paper §4.5, §5).
 
 The loop models the paper's runtime: a *generation worker* (accelerator) and
-a *retrieval worker* (host) execute concurrently; whenever one goes idle the
-scheduler traverses the RAGraphs of all in-flight requests, selects the next
-wavefront of ready sub-nodes, applies graph transformations (split under the
-Eq.1 budget, similarity reordering, speculative edges), and dispatches the
-transformed sub-nodes to that worker's queue.  Time is tracked event-driven
-(worker completion / request arrival), so baselines with coarse stages show
-their real head-of-line blocking and the fine-grained mode shows real
-overlap — on any host, including this single-CPU container, because work is
-*executed* exactly and *charged* through the backend's timing model.
+a pool of ``num_ret_workers`` *retrieval workers* (host) execute
+concurrently; whenever one goes idle the scheduler traverses the RAGraphs of
+all in-flight requests in SLO-slack order, selects the next wavefront of
+ready sub-nodes, applies graph transformations (split under the Eq.1 budget,
+similarity reordering, speculative edges), and dispatches the transformed
+sub-nodes to that worker's queue — retrieval sub-stages are placed by the
+skew-aware policy in serving/dispatch.py (cluster affinity / least-loaded /
+round-robin).  Time is tracked event-driven (worker completion / request
+arrival), so baselines with coarse stages show their real head-of-line
+blocking and the fine-grained mode shows real overlap — on any host,
+including this single-CPU container, because work is *executed* exactly and
+*charged* through the backend's per-worker timing model.
 
 Modes (paper baselines, same loop, different policy switches):
   sequential  LangChain-like: whole-stage retrieval jobs, FIFO one at a time
@@ -31,6 +34,7 @@ from repro.core.speculation import SpeculationPolicy, Speculator
 from repro.core.substage import TimeBudget
 from repro.core import transforms
 from repro.retrieval.ivf import TopK
+from repro.serving import dispatch as dispatch_mod
 
 
 @dataclasses.dataclass
@@ -49,7 +53,9 @@ class SchedulerConfig:
     sched_overhead_us: float = 120.0
     straggler_redispatch: bool = True
     straggler_cap: float = 2.0  # re-dispatch when > cap x expected
-    slo_us: float = 10e6
+    slo_us: float = 10e6  # default; overridden per-request via RequestContext
+    num_ret_workers: int = 1
+    dispatch_policy: str = "affinity"  # affinity | least_loaded | round_robin
 
     @classmethod
     def preset(cls, mode: str, **kw) -> "SchedulerConfig":
@@ -76,7 +82,8 @@ class Metrics:
     finished: int = 0
     sim_time_us: float = 0.0
     gen_busy_us: float = 0.0
-    ret_busy_us: float = 0.0
+    # one slot per retrieval worker; ret_busy_us (total) is derived
+    ret_busy_per_worker: list = dataclasses.field(default_factory=lambda: [0.0])
     gen_tokens: int = 0
     substages_gen: int = 0
     substages_ret: int = 0
@@ -90,9 +97,15 @@ class Metrics:
     straggler_redispatches: int = 0
     slo_violations: int = 0
 
+    @property
+    def ret_busy_us(self) -> float:
+        return float(sum(self.ret_busy_per_worker))
+
     def summary(self) -> dict:
         lat = np.asarray(self.latencies_us, np.float64)
         t = max(self.sim_time_us, 1e-9)
+        per = np.asarray(self.ret_busy_per_worker or [0.0], np.float64)
+        util = per / t
         return {
             "finished": self.finished,
             "avg_latency_ms": float(lat.mean() / 1e3) if lat.size else float("nan"),
@@ -100,7 +113,12 @@ class Metrics:
             "p95_latency_ms": float(np.percentile(lat, 95) / 1e3) if lat.size else float("nan"),
             "throughput_rps": self.finished / (t / 1e6),
             "gen_util": self.gen_busy_us / t,
-            "ret_util": self.ret_busy_us / t,
+            "num_ret_workers": int(per.size),
+            "ret_util": float(util.mean()),
+            "ret_util_min": float(util.min()),
+            "ret_util_max": float(util.max()),
+            "ret_worker_skew": float(util.max() / util.mean())
+            if util.mean() > 0 else 1.0,
             "gen_tokens": self.gen_tokens,
             "substages_gen": self.substages_gen,
             "substages_ret": self.substages_ret,
@@ -127,10 +145,16 @@ class WavefrontScheduler:
         self.dag = RuntimeDAG()
         self.budget = TimeBudget()
         self.spec = Speculator(config.speculation)
+        self.num_ret_workers = max(1, int(config.num_ret_workers))
+        self.dispatcher = dispatch_mod.RetrievalDispatcher(
+            self.num_ret_workers, index.n_clusters,
+            policy=config.dispatch_policy)
         self.metrics = Metrics()
+        self.metrics.ret_busy_per_worker = [0.0] * self.num_ret_workers
         self.pending: list[RequestContext] = []
         self.active: list[RequestContext] = []
         self.done: list[RequestContext] = []
+        self._cluster_sizes = index.cluster_sizes()
         self._ret_fifo: list[RequestContext] = []  # coarse-mode stage queue
         self._spec_ret_round: dict[int, int] = {}  # req -> last spec-ret round
 
@@ -153,7 +177,8 @@ class WavefrontScheduler:
                 if req.gen is None:
                     tgt = self.workload.gen_tokens(req.request_id, node.node_id,
                                                    node.max_tokens)
-                    req.gen = GenProgress(target_tokens=tgt, started_at=now)
+                    req.gen = GenProgress(target_tokens=tgt, started_at=now,
+                                          node_id=node.node_id)
                     req.log(now, "gen_stage_start", node.node_id)
                 return
             assert isinstance(node, RetrievalNode)
@@ -221,7 +246,13 @@ class WavefrontScheduler:
         req.ret = None
         gen_keep = req.gen
         if req.advance():
-            req.gen = gen_keep if gen_keep is not None else None
+            # only restore generation progress onto the node it belongs to —
+            # an unconditional restore can resurrect stale progress onto an
+            # unrelated successor (e.g. the next node of a ret->ret chain)
+            if (gen_keep is not None
+                    and isinstance(req.node, GenerationNode)
+                    and gen_keep.node_id in (None, req.current)):
+                req.gen = gen_keep
             self._enter_stage(req, now)
         else:
             self._finish_request(req, now)
@@ -247,7 +278,7 @@ class WavefrontScheduler:
         req.finish_us = now
         lat = now - req.arrival_us
         self.metrics.latencies_us.append(lat)
-        if lat > self.cfg.slo_us:
+        if lat > (req.slo_us or self.cfg.slo_us):
             self.metrics.slo_violations += 1
         self.metrics.finished += 1
         self.active.remove(req)
@@ -255,13 +286,20 @@ class WavefrontScheduler:
         self.dag.gc()
 
     # ------------------------------------------------------ work assembly
+    def _slack_order(self, reqs, now: float) -> list:
+        """Wavefront order: tightest SLO slack admitted to assembly first."""
+        return dispatch_mod.order_by_slack(
+            reqs, now, self.budget, self.backend.cluster_cost_model,
+            self._cluster_sizes, self.cfg.slo_us)
+
     def _assemble_gen(self, now: float):
         """Continuous-batching generation sub-stage across requests."""
-        batch = [
+        ready = [
             r for r in self.active
             if r.gen is not None and not r.gen.done
             and r.gen.engine_seq != "inflight"
-        ][: self.cfg.max_gen_batch]
+        ]
+        batch = self._slack_order(ready, now)[: self.cfg.max_gen_batch]
         if not batch:
             return None
         n_steps = self.budget.gen_steps_for_budget(len(batch))
@@ -276,46 +314,70 @@ class WavefrontScheduler:
         self.metrics.substages_gen += 1
         return {"reqs": batch, "n_steps": n_steps, "end": now + dur, "dur": dur}
 
-    def _assemble_ret(self, now: float):
+    def _assemble_ret(self, now: float, idle: list[int]) -> dict:
+        """Assemble retrieval jobs for the idle workers; returns {wid: job}."""
         if self.cfg.mode == "hedra":
-            return self._assemble_ret_substage(now)
-        return self._assemble_ret_coarse(now)
+            return self._assemble_ret_substage(now, idle)
+        return self._assemble_ret_coarse(now, idle)
 
-    def _assemble_ret_substage(self, now: float):
-        jobs = []  # (req, clusters)
-        work = []  # (qvec, cid, topk) items
-        for r in self.active:
-            if r.ret is None or r.ret.done or getattr(r.ret, "_inflight", False):
-                continue
+    def _finalize_ret_job(self, now: float, wid: int, jobs, work, spec_items):
+        charge, results_fn = self.backend.search_charged(
+            work + [w for _, w in spec_items], worker_id=wid)
+        dur = self._mitigate_straggler(charge, expected=charge, worker_id=wid)
+        self.dispatcher.note_busy(wid, dur)
+        self.metrics.substages_ret += 1
+        return {"jobs": jobs, "work": work, "spec": spec_items,
+                "results_fn": results_fn, "end": now + dur, "dur": dur,
+                "worker": wid}
+
+    def _assemble_ret_substage(self, now: float, idle: list[int]) -> dict:
+        per_jobs: dict[int, list] = {w: [] for w in idle}
+        per_work: dict[int, list] = {w: [] for w in idle}
+        # estimated cost handed to each worker *this cycle*; lets the
+        # dispatcher spread simultaneous sub-stages instead of piling them
+        # onto the worker that was least loaded when the cycle started
+        cycle_load: dict[int, float] = {w: 0.0 for w in idle}
+        cm = self.backend.cluster_cost_model
+        ready = [r for r in self.active
+                 if r.ret is not None and not r.ret.done
+                 and not getattr(r.ret, "_inflight", False)]
+        for r in self._slack_order(ready, now):
             sn = transforms.split_retrieval_next(
-                self.dag, r, self.budget, self.backend.cluster_cost_model,
-                self.index.cluster_sizes(),
+                self.dag, r, self.budget, cm, self._cluster_sizes,
             )
             if sn is None:
                 continue
             clusters = sn.payload["clusters"]
+            wid = self.dispatcher.pick_worker(clusters, idle,
+                                              extra_load=cycle_load)
             r.ret.cluster_queue = r.ret.cluster_queue[len(clusters):]
             r.ret._inflight = True  # type: ignore[attr-defined]
-            jobs.append((r, clusters, sn))
+            self.dispatcher.note_dispatch(wid, clusters)
+            cycle_load[wid] += cm.batch_cost_us(
+                self._cluster_sizes[np.asarray(clusters, np.int64)])
+            per_jobs[wid].append((r, clusters, sn))
             for c in clusters:
-                work.append((r.ret.query_vec, c, r.ret.topk))
+                per_work[wid].append((r.ret.query_vec, c, r.ret.topk))
         spec_items = self._maybe_spec_retrieval(now)
-        if not work and not spec_items:
-            return None
-        charge, results_fn = self.backend.search_charged(work + [w for _, w in spec_items])
-        dur = self._mitigate_straggler(charge, expected=charge)
-        self.metrics.substages_ret += 1
-        return {
-            "jobs": jobs, "work": work, "spec": spec_items,
-            "results_fn": results_fn, "end": now + dur, "dur": dur,
-        }
+        spec_wid = (self.dispatcher.least_loaded(idle, extra_load=cycle_load)
+                    if spec_items else None)
+        out = {}
+        for wid in idle:
+            spec_w = spec_items if wid == spec_wid else []
+            if not per_work[wid] and not spec_w:
+                continue
+            out[wid] = self._finalize_ret_job(now, wid, per_jobs[wid],
+                                              per_work[wid], spec_w)
+        return out
 
-    def _assemble_ret_coarse(self, now: float):
-        """Whole-stage jobs: sequential = FIFO-1, async = batch-all-queued."""
+    def _assemble_ret_coarse(self, now: float, idle: list[int]) -> dict:
+        """Whole-stage jobs: sequential = FIFO-1, async = batch-all-queued.
+        Coarse baselines keep the paper's single-retrieval-worker shape: the
+        whole batch lands on one (least-loaded) worker."""
         self._ret_fifo = [r for r in self._ret_fifo
                           if r in self.active and r.ret is not None and not r.ret.done]
         if not self._ret_fifo:
-            return None
+            return {}
         # both coarse baselines dispatch whole stages, one-shot batched over
         # everything queued; 'sequential' additionally holds the global lock
         take = list(self._ret_fifo)
@@ -328,17 +390,16 @@ class WavefrontScheduler:
             jobs.append((r, clusters, None))
             for c in clusters:
                 work.append((r.ret.query_vec, c, r.ret.topk))
-        charge, results_fn = self.backend.search_charged(work)
-        dur = self._mitigate_straggler(charge, expected=charge)
-        self.metrics.substages_ret += 1
-        return {"jobs": jobs, "work": work, "spec": [], "results_fn": results_fn,
-                "end": now + dur, "dur": dur}
+        wid = self.dispatcher.least_loaded(idle)
+        for _, clusters, _ in jobs:
+            self.dispatcher.note_dispatch(wid, clusters)
+        return {wid: self._finalize_ret_job(now, wid, jobs, work, [])}
 
     def _maybe_spec_retrieval(self, now: float):
         """Generation→Retrieval speculation: warm the LocalCache from a
         partial-generation embedding (runs as low-priority ret work)."""
         pol = self.cfg.speculation
-        ret_util = self.metrics.ret_busy_us / max(now, 1.0)
+        ret_util = self.metrics.ret_busy_us / max(now * self.num_ret_workers, 1.0)
         if not self.spec.throughput_gate(ret_util, 1.0):
             return []
         items = []
@@ -398,8 +459,9 @@ class WavefrontScheduler:
                                                   self.budget)
             r.gen.started_at = now
 
-    def _mitigate_straggler(self, dur: float, expected: float) -> float:
-        raw = self.backend.maybe_straggle(dur)
+    def _mitigate_straggler(self, dur: float, expected: float,
+                            worker_id: int = -1) -> float:
+        raw = self.backend.maybe_straggle(dur, worker_id=worker_id)
         if raw > self.cfg.straggler_cap * expected and self.cfg.straggler_redispatch:
             self.metrics.straggler_redispatches += 1
             return self.cfg.straggler_cap * expected + self.cfg.sched_overhead_us
@@ -409,7 +471,8 @@ class WavefrontScheduler:
     def run(self, max_time_us: float = 4e9) -> Metrics:
         now = 0.0
         gen_job = None
-        ret_job = None
+        nw = self.num_ret_workers
+        ret_jobs: list = [None] * nw
         guard = 0
         while True:
             guard += 1
@@ -424,20 +487,22 @@ class WavefrontScheduler:
             if self.cfg.speculation.enabled:
                 self._maybe_spec_generation(now)
             # dispatch to idle workers
+            ret_inflight = any(j is not None for j in ret_jobs)
             sequential_lock = (self.cfg.mode == "sequential" and
-                               (gen_job is not None or ret_job is not None))
+                               (gen_job is not None or ret_inflight))
             if gen_job is None and not sequential_lock:
                 gen_job = self._assemble_gen(now)
             sequential_lock = (self.cfg.mode == "sequential" and
-                               (gen_job is not None or ret_job is not None))
-            if ret_job is None and not sequential_lock:
-                ret_job = self._assemble_ret(now)
+                               (gen_job is not None or ret_inflight))
+            idle = [w for w in range(nw) if ret_jobs[w] is None]
+            if idle and not sequential_lock:
+                for wid, job in self._assemble_ret(now, idle).items():
+                    ret_jobs[wid] = job
             # advance virtual time
             events = []
             if gen_job:
                 events.append(gen_job["end"])
-            if ret_job:
-                events.append(ret_job["end"])
+            events.extend(j["end"] for j in ret_jobs if j is not None)
             if self.pending:
                 events.append(self.pending[0].arrival_us)
             if not events:
@@ -458,10 +523,12 @@ class WavefrontScheduler:
                 self.metrics.gen_busy_us += gen_job["dur"]
                 self._complete_gen(gen_job, now)
                 gen_job = None
-            if ret_job and ret_job["end"] <= now:
-                self.metrics.ret_busy_us += ret_job["dur"]
-                self._complete_ret(ret_job, now)
-                ret_job = None
+            for wid in range(nw):
+                job = ret_jobs[wid]
+                if job and job["end"] <= now:
+                    self.metrics.ret_busy_per_worker[wid] += job["dur"]
+                    self._complete_ret(job, now)
+                    ret_jobs[wid] = None
         self.metrics.sim_time_us = now
         return self.metrics
 

@@ -32,6 +32,11 @@ def main() -> None:
     ap.add_argument("--workflow", default="one-shot",
                     choices=list(workflows.WORKFLOWS))
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--ret-workers", type=int, default=1,
+                    help="size of the retrieval worker pool")
+    ap.add_argument("--dispatch", default="affinity",
+                    choices=["affinity", "least_loaded", "round_robin"],
+                    help="retrieval sub-stage placement policy")
     args = ap.parse_args()
 
     docs, _, topics = make_corpus(CorpusConfig(n_docs=8000, dim=48, n_topics=64))
@@ -56,7 +61,9 @@ def main() -> None:
         return orig(n_prefill_tokens, batch, n_steps)
 
     backend.gen_duration = gen_duration
-    server = Server(index, embedder, mode="hedra", backend=backend, nprobe=8)
+    server = Server(index, embedder, mode="hedra", backend=backend, nprobe=8,
+                    num_ret_workers=args.ret_workers,
+                    dispatch_policy=args.dispatch)
     for i in range(args.n_requests):
         server.add_request(f"query {i}", workflows.build(args.workflow),
                            arrival_us=i * 20_000.0)

@@ -261,6 +261,14 @@ class ClusterCostModel:
     def cost_us(self, size: int, n_queries: int = 1) -> float:
         return self.fixed_us + self.per_vector_us * size + self.per_query_us * n_queries
 
+    def batch_cost_us(self, sizes: np.ndarray, n_queries: int = 1) -> float:
+        """Vectorized sum of cost_us over many clusters (one query each)."""
+        sizes = np.asarray(sizes, np.float64)
+        return float(
+            sizes.size * (self.fixed_us + self.per_query_us * n_queries)
+            + self.per_vector_us * sizes.sum()
+        )
+
     @classmethod
     def calibrate(cls, index: IVFIndex, n_samples: int = 32, seed: int = 0) -> "ClusterCostModel":
         import time

@@ -57,7 +57,8 @@ class Server:
         state = {"input": input_text,
                  "_target_rounds": self.workload.iterations(rid)}
         req = RequestContext(request_id=rid, graph=graph, state=state,
-                             arrival_us=float(arrival_us))
+                             arrival_us=float(arrival_us),
+                             slo_us=self.workload.slo_us(rid))
         self.sched.add_request(req)
         return rid
 

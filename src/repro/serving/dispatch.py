@@ -1,0 +1,159 @@
+"""SLO- and skew-aware dispatch of retrieval sub-stages to a worker pool.
+
+The paper's inter-request skewness observation (§4.4, Fig. 8) says a small
+set of IVF clusters absorbs most probes.  When the host side runs more than
+one retrieval worker, that skew becomes a placement problem: routing a hot
+cluster to the worker that served it recently keeps per-worker working sets
+small (cache/NUMA locality in the real engine; preserved same-cluster query
+batching in the simulated one), while cold clusters should simply go to
+whoever is least loaded.  Orthogonally, per-request SLOs (RAGO-style
+schedule search) need near-deadline requests admitted to sub-stage assembly
+first, which is a pure ordering concern.
+
+This module keeps both concerns out of the scheduler loop:
+
+* ``RetrievalDispatcher`` — per-worker EMA cluster-affinity history plus
+  accumulated busy time; ``pick_worker`` implements the policies
+  ``affinity`` (history coverage, least-loaded fallback), ``least_loaded``
+  and ``round_robin``.
+* ``order_by_slack`` — sorts a wavefront by SLO slack
+  ``deadline - now - estimated_remaining`` so the tightest requests are
+  assembled (and therefore dispatched) first.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Sequence
+
+import numpy as np
+
+DISPATCH_POLICIES = ("affinity", "least_loaded", "round_robin")
+
+
+@dataclasses.dataclass
+class WorkerState:
+    wid: int
+    freq: np.ndarray  # per-cluster EMA of recently dispatched clusters
+    # policy-side load proxy (post-mitigation durations via note_busy); the
+    # authoritative per-worker occupancy report is Metrics.ret_busy_per_worker
+    busy_us: float = 0.0
+    dispatches: int = 0
+
+
+class RetrievalDispatcher:
+    """Assigns retrieval sub-stages (cluster lists) to a pool of workers."""
+
+    def __init__(self, num_workers: int, n_clusters: int, *,
+                 policy: str = "affinity", decay: float = 0.95):
+        if policy not in DISPATCH_POLICIES:
+            raise ValueError(
+                f"unknown dispatch policy {policy!r}; choose from {DISPATCH_POLICIES}")
+        self.num_workers = max(1, int(num_workers))
+        self.policy = policy
+        self.decay = decay
+        self.workers = [
+            WorkerState(w, np.zeros(n_clusters, np.float64))
+            for w in range(self.num_workers)
+        ]
+        self._rr = 0
+
+    # ---------------------------------------------------------------- choice
+    def least_loaded(self, candidates: Sequence[int],
+                     extra_load: Optional[dict] = None) -> int:
+        """Lowest accumulated busy time.  ``extra_load`` carries load already
+        assigned *during the current assembly cycle* (before any note_busy)
+        so that several sub-stages assembled at the same instant spread
+        across the pool instead of piling onto one worker."""
+        extra = extra_load or {}
+
+        def load(w: int) -> float:
+            return self.workers[w].busy_us + extra.get(w, 0.0)
+
+        return min(candidates, key=lambda w: (load(w), w))
+
+    def pick_worker(self, clusters: Iterable[int], candidates: Sequence[int],
+                    extra_load: Optional[dict] = None) -> int:
+        """Choose a worker among ``candidates`` (idle worker ids) for a
+        sub-stage touching ``clusters``."""
+        if not candidates:
+            raise ValueError("no candidate workers")
+        if len(candidates) == 1:
+            return candidates[0]
+        if self.policy == "round_robin":
+            w = candidates[self._rr % len(candidates)]
+            self._rr += 1
+            return w
+        if self.policy == "least_loaded":
+            return self.least_loaded(candidates, extra_load)
+        # affinity: worker whose recent history best covers these clusters;
+        # cold clusters (no history anywhere) fall back to least-loaded
+        extra = extra_load or {}
+        cl = np.asarray(list(clusters), np.int64)
+        scores = {w: float(self.workers[w].freq[cl].sum()) for w in candidates}
+        best = max(candidates,
+                   key=lambda w: (scores[w],
+                                  -(self.workers[w].busy_us + extra.get(w, 0.0))))
+        if scores[best] <= 0.0:
+            return self.least_loaded(candidates, extra_load)
+        return best
+
+    # --------------------------------------------------------------- updates
+    def note_dispatch(self, wid: int, clusters: Iterable[int]) -> None:
+        st = self.workers[wid]
+        st.freq *= self.decay
+        cl = np.asarray(list(clusters), np.int64)
+        if cl.size:
+            np.add.at(st.freq, cl, 1.0)
+        st.dispatches += 1
+
+    def note_busy(self, wid: int, dur_us: float) -> None:
+        self.workers[wid].busy_us += dur_us
+
+    # ----------------------------------------------------------------- stats
+    def report(self) -> dict:
+        busy = np.asarray([w.busy_us for w in self.workers])
+        return {
+            "busy_us": busy.tolist(),
+            "dispatches": [w.dispatches for w in self.workers],
+            "busy_skew": float(busy.max() / busy.mean()) if busy.mean() > 0 else 1.0,
+        }
+
+
+# ---------------------------------------------------------------------------
+# SLO slack ordering
+# ---------------------------------------------------------------------------
+
+
+def estimate_remaining_us(req, budget, cost_model, sizes) -> float:
+    """First-order estimate of a request's remaining service time: the cost
+    of its unsearched clusters plus its ungenerated tokens at the current
+    EMA decode rate.  Later stages of the workflow are not modelled — slack
+    is used for *ordering*, so only relative magnitudes matter."""
+    est = 0.0
+    if req.ret is not None and not req.ret.done and req.ret.cluster_queue:
+        queued = np.asarray(req.ret.cluster_queue, np.int64)
+        est += cost_model.batch_cost_us(sizes[queued])
+    if req.gen is not None and not req.gen.done:
+        remaining = max(req.gen.target_tokens - req.gen.generated, 0)
+        est += remaining * budget.t_decode_step_us
+    return est
+
+
+def slo_slack_us(req, now: float, budget, cost_model, sizes,
+                 default_slo_us: float) -> float:
+    """deadline - now - estimated_remaining; negative -> already late."""
+    slo = getattr(req, "slo_us", 0.0) or default_slo_us
+    deadline = req.arrival_us + slo
+    return deadline - now - estimate_remaining_us(req, budget, cost_model, sizes)
+
+
+def order_by_slack(reqs, now: float, budget, cost_model, sizes,
+                   default_slo_us: float) -> list:
+    """Wavefront order for sub-stage assembly: tightest slack first (ties
+    broken by arrival so the order is deterministic)."""
+    return sorted(
+        reqs,
+        key=lambda r: (slo_slack_us(r, now, budget, cost_model, sizes,
+                                    default_slo_us),
+                       r.arrival_us, r.request_id),
+    )

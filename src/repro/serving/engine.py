@@ -46,13 +46,13 @@ def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048)) -> int:
 class GenerationEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  max_len: int = 512, eos_id: int = 0,
-                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0):
+                 sampler: Optional[SamplerConfig] = None, seed: int = 0):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
-        self.sampler = sampler
+        self.sampler = sampler if sampler is not None else SamplerConfig()
         self.state = lm.init_decode_state(cfg, max_batch, max_len)
         self.free_slots = list(range(max_batch))
         self.seqs: dict[int, Sequence] = {}
@@ -95,8 +95,20 @@ class GenerationEngine:
         if not self.free_slots:
             raise RuntimeError("no free slots")
         slot = self.free_slots.pop()
+        # decode writes land at cache_len, so the padded prompt width plus
+        # the decode cap must fit the cache or late steps clamp at max_len
+        # and corrupt the last KV slot.  Reserve decode room for max_new
+        # (but at most half the cache — max_new is often a loose cap), keep
+        # the prompt suffix (left-pad semantics), and shrink the effective
+        # max_new to the headroom left after padding.
+        decode_room = min(max_new, max(self.max_len // 2, 1))
+        keep = max(self.max_len - decode_room, 1)
+        prompt_tokens = np.asarray(prompt_tokens)
+        if len(prompt_tokens) > keep:
+            prompt_tokens = prompt_tokens[-keep:]
         n = len(prompt_tokens)
-        pad_to = min(_bucket(n), self.max_len)
+        pad_to = min(_bucket(n), keep)
+        max_new = min(max_new, self.max_len - pad_to)
         toks = np.zeros((1, pad_to), np.int32)
         toks[0, pad_to - n:] = prompt_tokens  # left-pad (simplest causal-safe)
         logits, st1 = self._prefill(self.params, jnp.asarray(toks))

@@ -21,6 +21,10 @@ class WorkloadProfile:
     max_gen_tokens: int = 512
     iterations_mean: float = 2.5  # rounds for iterative workflows
     iterations_max: int = 5
+    # per-request latency SLO (us); mean 0 -> no per-request SLO, the
+    # scheduler falls back to SchedulerConfig.slo_us for every request
+    slo_us_mean: float = 0.0
+    slo_us_sigma: float = 0.0  # lognormal spread of per-request deadlines
     seed: int = 7
 
     def _rng(self, request_id: int, node_id: int, tag: int) -> np.random.Generator:
@@ -42,6 +46,15 @@ class WorkloadProfile:
         r = self._rng(request_id, 0, 2)
         v = 1 + r.poisson(max(self.iterations_mean - 1.0, 0.0))
         return int(np.clip(v, 1, self.iterations_max))
+
+    def slo_us(self, request_id: int) -> float:
+        """Per-request deadline length; 0.0 means 'use the server default'."""
+        if self.slo_us_mean <= 0.0:
+            return 0.0
+        if self.slo_us_sigma <= 0.0:
+            return float(self.slo_us_mean)
+        r = self._rng(request_id, 0, 3)
+        return float(r.lognormal(np.log(self.slo_us_mean), self.slo_us_sigma))
 
 
 def poisson_arrivals(rate_per_s: float, n: int, seed: int = 11) -> np.ndarray:

@@ -24,10 +24,11 @@ class DataConfig:
 
 
 class SyntheticTokenStream:
-    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, data_cfg: DataConfig = DataConfig()):
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig,
+                 data_cfg: DataConfig | None = None):
         self.cfg = cfg
         self.shape = shape
-        self.data_cfg = data_cfg
+        self.data_cfg = data_cfg if data_cfg is not None else DataConfig()
 
     def batch_at(self, step: int, local_batch: int | None = None,
                  batch_offset: int = 0) -> dict:

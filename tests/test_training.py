@@ -127,3 +127,28 @@ def test_generation_engine_continuous_batching(tiny):
     while eng.batch_size:
         eng.step()
     assert len(eng.free_slots) == 3
+
+
+def test_generation_engine_truncates_long_prompt(tiny):
+    """Prompts longer than max_len must left-truncate (keep the suffix)
+    instead of crashing on the pad-slot broadcast."""
+    from repro.serving.engine import GenerationEngine
+
+    cfg, params = tiny
+    eng = GenerationEngine(cfg, params, max_batch=2, max_len=64, eos_id=-1)
+    sid = eng.add_sequence(np.arange(200) % 200 + 1, max_new=2)
+    # suffix kept, with decode headroom reserved (max_len - max_new)
+    assert eng.seqs[sid].prompt_len == 62
+    while eng.batch_size:
+        eng.step()
+    assert len(eng.free_slots) == 2
+
+
+def test_generation_engine_sampler_not_shared(tiny):
+    """Each engine must own its SamplerConfig (no shared mutable default)."""
+    from repro.serving.engine import GenerationEngine
+
+    cfg, params = tiny
+    e1 = GenerationEngine(cfg, params, max_batch=1, max_len=32)
+    e2 = GenerationEngine(cfg, params, max_batch=1, max_len=32)
+    assert e1.sampler is not e2.sampler
