@@ -1,0 +1,95 @@
+"""Plan executor vs the per-item sub-stage path.
+
+Times one retrieval sub-stage worth of work — Q queries x C clusters each —
+through both executors:
+
+* **legacy** — the pre-plan protocol: ``search_cluster_batch`` over per-item
+  ``(query, cluster, TopK)`` tuples (one ``TopK.merge`` per item inside the
+  scan) followed by the per-item completion merge the scheduler used to do
+  (the "double merge").
+* **plan** — ``PlanBuilder`` -> ``IVFIndex.search_plan`` (segmented GEMM
+  scans into the SoA ``BatchTopK`` scoreboard) -> ``plan.finalize`` (one
+  vectorized fold per group, streaks included).
+
+Both paths produce identical ids (asserted against the reference
+``IVFIndex.search``); the emitted speedup is the acceptance metric.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, fixture
+from repro.retrieval.ivf import TopK
+from repro.retrieval.plan import PlanBuilder
+
+
+def _legacy_substage(index, queries, probes, k):
+    """Per-item path + completion merge, exactly the pre-plan hot loop."""
+    work = [(queries[i], int(probes[i, j]), TopK.empty(k))
+            for i in range(queries.shape[0]) for j in range(probes.shape[1])]
+    per_cluster = index.search_cluster_batch(work)
+    outs = []
+    idx = 0
+    for i in range(queries.shape[0]):
+        tk = TopK.empty(k)
+        for _ in range(probes.shape[1]):
+            r = per_cluster[idx]
+            idx += 1
+            keep = r.ids >= 0
+            tk = tk.merge(r.dists[keep], r.ids[keep])
+        outs.append(tk)
+    return outs
+
+
+def _plan_substage(index, queries, probes, k):
+    b = PlanBuilder()
+    for i in range(queries.shape[0]):
+        b.add(queries[i], probes[i], k=k)
+    plan = b.build()
+    res = plan.finalize(index.search_plan(plan))
+    return plan, res
+
+
+def _bench_pair(fn_a, fn_b, reps):
+    """Interleaved best-of-reps so machine noise hits both paths alike."""
+    fn_a(), fn_b()  # warmup
+    best_a = best_b = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn_a()
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a * 1e6, best_b * 1e6
+
+
+def run(quick: bool = True) -> None:
+    index, embedder = fixture()
+    rng = np.random.default_rng(11)
+    k = 10
+    reps = 10 if quick else 30
+    sweeps = ([(64, 8), (128, 8)] if quick
+              else [(32, 8), (64, 8), (128, 8), (64, 16), (256, 8)])
+    for n_q, n_c in sweeps:
+        queries = np.stack([embedder.embed_query(i, 0) for i in range(n_q)])
+        probes = index.probe_order(queries, n_c)
+        n_items = n_q * n_c
+
+        # correctness gate: plan path == reference search over the same probes
+        plan, res = _plan_substage(index, queries, probes, k)
+        ref_d, ref_i = index.search(queries, n_c, k)
+        assert np.array_equal(res.ids[:, :k], ref_i), "plan ids != reference"
+        np.testing.assert_allclose(res.dists[:, :k], ref_d, atol=1e-4)
+        legacy = _legacy_substage(index, queries, probes, k)
+        for i, tk in enumerate(legacy):
+            assert np.array_equal(tk.ids, ref_i[i]), "legacy ids != reference"
+
+        t_legacy, t_plan = _bench_pair(
+            lambda: _legacy_substage(index, queries, probes, k),
+            lambda: _plan_substage(index, queries, probes, k), reps)
+        emit(f"plan_legacy_{n_items}items", t_legacy, f"n_items={n_items}")
+        emit(f"plan_soa_{n_items}items", t_plan,
+             f"n_items={n_items}_speedup={t_legacy / t_plan:.2f}x_check=ok")

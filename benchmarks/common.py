@@ -73,5 +73,12 @@ def load_requests(server: Server, n: int, rate: float, names=None, seed: int = 1
                            arrival_us=t)
 
 
+# rows emitted by the current process, harvested by run.py --json
+RESULTS: list[dict] = []
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    RESULTS.append(
+        {"name": name, "us_per_call": round(float(us_per_call), 1),
+         "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")

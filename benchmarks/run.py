@@ -22,6 +22,7 @@ MODULES = [
     ("offline", "benchmarks.bench_offline"),          # Fig. 13
     ("concurrent", "benchmarks.bench_concurrent"),    # Fig. 14
     ("multiworker", "benchmarks.bench_multiworker"),  # retrieval-pool scaling
+    ("plan", "benchmarks.bench_plan"),                # SoA sub-stage executor
     ("speculation", "benchmarks.bench_speculation"),  # Fig. 17
     ("kernels", "benchmarks.bench_kernels"),          # roofline kernels
 ]
@@ -31,18 +32,47 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="",
+                    help="write a BENCH_*.json-style record (per-module "
+                         "us_per_call rows + run metadata) to this path")
     args = ap.parse_args()
+    if args.only and args.only not in {name for name, _ in MODULES}:
+        ap.error(f"unknown --only module {args.only!r}; choose from "
+                 f"{[name for name, _ in MODULES]}")
 
     print("name,us_per_call,derived")
     import importlib
+    import json
+    import platform
 
+    from benchmarks import common
+
+    module_times = {}
     for name, mod in MODULES:
         if args.only and name != args.only:
             continue
         t0 = time.time()
         m = importlib.import_module(mod)
         m.run(quick=not args.full)
-        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        module_times[name] = round(time.time() - t0, 1)
+        print(f"# {name} done in {module_times[name]:.1f}s", file=sys.stderr)
+
+    if args.json:
+        record = {
+            "meta": {
+                "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+                "python": platform.python_version(),
+                "machine": platform.machine(),
+                "quick": not args.full,
+                "only": args.only or None,
+                "module_times_s": module_times,
+            },
+            "rows": common.RESULTS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=1)
+        print(f"# wrote {args.json} ({len(common.RESULTS)} rows)",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

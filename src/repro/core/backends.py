@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.retrieval.hybrid import HybridRetrievalEngine
 from repro.retrieval.ivf import ClusterCostModel, IVFIndex, TopK
+from repro.retrieval.plan import RetrievalPlan
 
 
 class SimBackend:
@@ -89,11 +90,21 @@ class SimBackend:
 
     # ------------------------------------------------------------- retrieval
     def search_charged(
-        self, work: Sequence[tuple[np.ndarray, int, TopK]],
-        worker_id: int = 0,
-    ) -> tuple[float, Callable[[], list]]:
-        """Returns (charged_us, results_fn).  results_fn() -> per-item
-        (dists, ids) candidate arrays (per-cluster top-k)."""
+        self, work, worker_id: int = 0,
+    ) -> tuple[float, Callable]:
+        """Returns (charged_us, results_fn).
+
+        ``work`` is a :class:`RetrievalPlan` (the SoA sub-stage protocol:
+        results_fn() -> the plan's item-level ``BatchTopK`` scoreboard) or a
+        legacy per-item work list (results_fn() -> per-item (dists, ids)
+        candidate arrays).  The plan path charges over the segment table in
+        one vectorized pass, with device residency *snapshotted here* — at
+        dispatch time — and threaded into execution, so the charged
+        host/device partition and the executed one agree even when cache
+        swaps land between dispatch and completion.
+        """
+        if isinstance(work, RetrievalPlan):
+            return self._search_charged_plan(work, worker_id)
         if not work:
             return 0.0, lambda: []
         # --- charge: host clusters at CPU rate, resident clusters at device
@@ -124,6 +135,36 @@ class SimBackend:
             else:
                 res = self.index.search_cluster_batch(base)
             return [(r.dists[r.ids >= 0], r.ids[r.ids >= 0]) for r in res]
+
+        return charge, results_fn
+
+    def _search_charged_plan(
+        self, plan: RetrievalPlan, worker_id: int,
+    ) -> tuple[float, Callable]:
+        """Vectorized charge over the plan's segment table + deferred exact
+        execution through the plan executor."""
+        seg_sizes = self._sizes[plan.seg_cluster]
+        costs = self.cluster_cost_model.cost_vec_us(seg_sizes, plan.seg_counts())
+        if self.hybrid is not None:
+            resident = self.hybrid.resident_mask()  # dispatch-time snapshot
+            dev = resident[plan.seg_cluster]
+            host_us = float(costs[~dev].sum())
+            dev_us = float(costs[dev].sum()) / self.device_speedup
+            if dev.any():
+                dev_us += self.device_launch_us
+        else:
+            resident = None
+            host_us, dev_us = float(costs.sum()), 0.0
+        charge = max(host_us, dev_us)
+        self.worker_busy_us[worker_id] = (
+            self.worker_busy_us.get(worker_id, 0.0) + charge)
+
+        # --- execute exactly (records accesses, drives cache updates); the
+        # snapshot rides in the closure so execution partitions like the charge
+        def results_fn(plan=plan, resident=resident):
+            if self.hybrid is not None:
+                return self.hybrid.search_plan(plan, resident=resident)
+            return self.index.search_plan(plan)
 
         return charge, results_fn
 
@@ -178,6 +219,13 @@ class RealBackend:
         return (time.perf_counter() - t0) * 1e6
 
     def search_charged(self, work, worker_id: int = 0):
+        if isinstance(work, RetrievalPlan):
+            t0 = time.perf_counter()
+            batch = self.hybrid.search_plan(work)
+            measured = (time.perf_counter() - t0) * 1e6
+            self.worker_busy_us[worker_id] = (
+                self.worker_busy_us.get(worker_id, 0.0) + measured)
+            return measured, lambda: batch
         if not work:
             return 0.0, lambda: []
         t0 = time.perf_counter()

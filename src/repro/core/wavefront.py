@@ -34,7 +34,10 @@ from repro.core.speculation import SpeculationPolicy, Speculator
 from repro.core.substage import TimeBudget
 from repro.core import transforms
 from repro.retrieval.ivf import TopK
+from repro.retrieval.plan import PlanBuilder
 from repro.serving import dispatch as dispatch_mod
+
+SPEC_RET_K = 20  # top-k width of speculative LocalCache warmups (paper k')
 
 
 @dataclasses.dataclass
@@ -157,6 +160,9 @@ class WavefrontScheduler:
         self._cluster_sizes = index.cluster_sizes()
         self._ret_fifo: list[RequestContext] = []  # coarse-mode stage queue
         self._spec_ret_round: dict[int, int] = {}  # req -> last spec-ret round
+        # request_id -> (query_vec, cluster queue) precomputed in one batched
+        # probe_order call for all arrivals admitted in the same cycle
+        self._probe_hints: dict[int, tuple] = {}
 
     # ------------------------------------------------------------------ API
     def add_request(self, req: RequestContext) -> None:
@@ -183,9 +189,15 @@ class WavefrontScheduler:
                 return
             assert isinstance(node, RetrievalNode)
             if req.ret is None:
-                qv = self.backend.query_embedding(req, req.round_idx)
                 nprobe = node.nprobe or self.cfg.nprobe
-                queue = [int(c) for c in self.index.probe_order(qv[None], nprobe)[0]]
+                hint = self._probe_hints.pop(req.request_id, None)
+                if hint is not None:
+                    qv, queue = hint
+                    queue = list(queue)
+                else:
+                    qv = self.backend.query_embedding(req, req.round_idx)
+                    queue = [int(c) for c in
+                             self.index.probe_order(qv[None], nprobe)[0]]
                 req.ret = RetProgress(
                     query_vec=qv, cluster_queue=queue,
                     topk=TopK.empty(node.topk or self.cfg.topk),
@@ -285,6 +297,27 @@ class WavefrontScheduler:
         self.done.append(req)
         self.dag.gc()
 
+    def _prime_probe_orders(self, reqs: list, now: float) -> None:
+        """Batch the nprobe ranking for all arrivals admitted this cycle:
+        one ``probe_order`` call per distinct nprobe instead of one per
+        request.  Results are stashed as hints consumed by ``_enter_stage``."""
+        by_nprobe: dict[int, list] = {}
+        for r in reqs:
+            if r.finished or r.ret is not None:
+                continue
+            nid = r.current if r.current is not None else r.graph.entry()
+            node = r.graph.nodes.get(nid)
+            if not isinstance(node, RetrievalNode):
+                continue
+            qv = self.backend.query_embedding(r, r.round_idx)
+            by_nprobe.setdefault(node.nprobe or self.cfg.nprobe, []).append((r, qv))
+        for nprobe, lst in by_nprobe.items():
+            order = self.index.probe_order(
+                np.stack([qv for _, qv in lst]), nprobe)
+            for (r, qv), row in zip(lst, order):
+                self._probe_hints[r.request_id] = (
+                    qv, [int(c) for c in row])
+
     # ------------------------------------------------------ work assembly
     def _slack_order(self, reqs, now: float) -> list:
         """Wavefront order: tightest SLO slack admitted to assembly first."""
@@ -320,19 +353,29 @@ class WavefrontScheduler:
             return self._assemble_ret_substage(now, idle)
         return self._assemble_ret_coarse(now, idle)
 
-    def _finalize_ret_job(self, now: float, wid: int, jobs, work, spec_items):
-        charge, results_fn = self.backend.search_charged(
-            work + [w for _, w in spec_items], worker_id=wid)
+    def _finalize_ret_job(self, now: float, wid: int, plan) -> dict:
+        charge, results_fn = self.backend.search_charged(plan, worker_id=wid)
         dur = self._mitigate_straggler(charge, expected=charge, worker_id=wid)
         self.dispatcher.note_busy(wid, dur)
         self.metrics.substages_ret += 1
-        return {"jobs": jobs, "work": work, "spec": spec_items,
-                "results_fn": results_fn, "end": now + dur, "dur": dur,
-                "worker": wid}
+        return {"plan": plan, "results_fn": results_fn,
+                "end": now + dur, "dur": dur, "worker": wid}
+
+    def _add_ret_group(self, builder: PlanBuilder, r: RequestContext,
+                       clusters, sn) -> None:
+        """One plan group per request sub-stage, seeded with the running
+        top-k and the early-termination streak state at assembly time."""
+        builder.add(
+            r.ret.query_vec, clusters,
+            k=r.ret.topk.k,
+            meta=("ret", r, sn, list(clusters)),
+            seed=r.ret.topk,
+            last_kth=r.ret.last_kth,
+            no_improve=r.ret.no_improve,
+        )
 
     def _assemble_ret_substage(self, now: float, idle: list[int]) -> dict:
-        per_jobs: dict[int, list] = {w: [] for w in idle}
-        per_work: dict[int, list] = {w: [] for w in idle}
+        builders: dict[int, PlanBuilder] = {w: PlanBuilder() for w in idle}
         # estimated cost handed to each worker *this cycle*; lets the
         # dispatcher spread simultaneous sub-stages instead of piling them
         # onto the worker that was least loaded when the cycle started
@@ -355,20 +398,15 @@ class WavefrontScheduler:
             self.dispatcher.note_dispatch(wid, clusters)
             cycle_load[wid] += cm.batch_cost_us(
                 self._cluster_sizes[np.asarray(clusters, np.int64)])
-            per_jobs[wid].append((r, clusters, sn))
-            for c in clusters:
-                per_work[wid].append((r.ret.query_vec, c, r.ret.topk))
+            self._add_ret_group(builders[wid], r, clusters, sn)
         spec_items = self._maybe_spec_retrieval(now)
-        spec_wid = (self.dispatcher.least_loaded(idle, extra_load=cycle_load)
-                    if spec_items else None)
-        out = {}
-        for wid in idle:
-            spec_w = spec_items if wid == spec_wid else []
-            if not per_work[wid] and not spec_w:
-                continue
-            out[wid] = self._finalize_ret_job(now, wid, per_jobs[wid],
-                                              per_work[wid], spec_w)
-        return out
+        if spec_items:
+            spec_wid = self.dispatcher.least_loaded(idle, extra_load=cycle_load)
+            for r, emb, probes in spec_items:
+                builders[spec_wid].add(emb, probes, k=SPEC_RET_K,
+                                       meta=("spec", r, emb, probes))
+        return {wid: self._finalize_ret_job(now, wid, builders[wid].build())
+                for wid in idle if not builders[wid].empty}
 
     def _assemble_ret_coarse(self, now: float, idle: list[int]) -> dict:
         """Whole-stage jobs: sequential = FIFO-1, async = batch-all-queued.
@@ -382,18 +420,15 @@ class WavefrontScheduler:
         # everything queued; 'sequential' additionally holds the global lock
         take = list(self._ret_fifo)
         self._ret_fifo = []
-        jobs, work = [], []
+        builder = PlanBuilder()
+        wid = self.dispatcher.least_loaded(idle)
         for r in take:
             clusters = list(r.ret.cluster_queue)
             r.ret.cluster_queue = []
             r.ret._inflight = True  # type: ignore[attr-defined]
-            jobs.append((r, clusters, None))
-            for c in clusters:
-                work.append((r.ret.query_vec, c, r.ret.topk))
-        wid = self.dispatcher.least_loaded(idle)
-        for _, clusters, _ in jobs:
             self.dispatcher.note_dispatch(wid, clusters)
-        return {wid: self._finalize_ret_job(now, wid, jobs, work, [])}
+            self._add_ret_group(builder, r, clusters, None)
+        return {wid: self._finalize_ret_job(now, wid, builder.build())}
 
     def _maybe_spec_retrieval(self, now: float):
         """Generation→Retrieval speculation: warm the LocalCache from a
@@ -419,11 +454,9 @@ class WavefrontScheduler:
             self._spec_ret_round[r.request_id] = r.round_idx
             emb = self.backend.partial_embedding(r, r.round_idx, ratio)
             probes = self.index.probe_order(emb[None], max(4, self.cfg.nprobe // 8))[0]
-            tk = TopK.empty(20)
-            for c in probes[:4]:
-                items.append((r, (emb, int(c), tk)))
+            items.append((r, emb, [int(c) for c in probes[:4]]))
             self.metrics.spec_ret_launches += 1
-            if len(items) >= pol.max_spec_per_cycle * 4:
+            if len(items) >= pol.max_spec_per_cycle:
                 break
         return items
 
@@ -478,11 +511,16 @@ class WavefrontScheduler:
             guard += 1
             if guard > 5_000_000:
                 raise RuntimeError("scheduler stuck — no progress")
-            # admit arrivals
+            # admit arrivals (probe orders batched across the whole cycle)
+            admitted = []
             while self.pending and self.pending[0].arrival_us <= now:
                 req = self.pending.pop(0)
                 self.active.append(req)
-                self._enter_stage(req, now)
+                admitted.append(req)
+            if admitted:
+                self._prime_probe_orders(admitted, now)
+                for req in admitted:
+                    self._enter_stage(req, now)
             # speculation decisions on the current wavefront
             if self.cfg.speculation.enabled:
                 self._maybe_spec_generation(now)
@@ -551,40 +589,33 @@ class WavefrontScheduler:
                     self._finish_gen_stage(r, now)
 
     def _complete_ret(self, job, now: float) -> None:
-        results = job["results_fn"]()  # per work item: (dists, ids) candidates
-        idx = 0
-        for r, clusters, sn in job["jobs"]:
-            for _ in clusters:
-                d, i = results[idx]
-                idx += 1
-                r.ret.topk = r.ret.topk.merge(d, i)
-                # adaptive-termination streak (per cluster)
-                if r.ret.topk.kth < r.ret.last_kth - 1e-12:
-                    r.ret.no_improve = 0
-                    r.ret.last_kth = r.ret.topk.kth
-                else:
-                    r.ret.no_improve += 1
-            r.ret.searched.extend(clusters)
-            r.ret._inflight = False  # type: ignore[attr-defined]
-            if sn is not None:
-                self.dag.complete(sn)
-            if self.cfg.enable_early_term and not r.ret.done:
-                if transforms.maybe_early_terminate(
-                        self.index, r, mode=self.cfg.early_term_mode,
-                        patience=self.cfg.early_term_patience):
-                    self.metrics.early_terms += 1
-            if r.ret.done:
-                self._finish_ret_stage(r, now)
-        # speculative-retrieval warmups: results land in the LocalCache
-        spec_acc: dict[int, tuple] = {}
-        for r, (emb, cid, tk) in job["spec"]:
-            d, i = results[idx]
-            idx += 1
-            tk2 = spec_acc.get(r.request_id, (r, emb, tk, []))[2].merge(d, i)
-            probed = spec_acc.get(r.request_id, (r, emb, tk, []))[3] + [cid]
-            spec_acc[r.request_id] = (r, emb, tk2, probed)
-        for r, emb, tk2, probed in spec_acc.values():
-            if r.sim_cache is None:
-                r.sim_cache = LocalCache()
-            r.sim_cache.update(emb, tk2, self.index, probed)
-            self.spec.stats.attempted_ret += 1
+        plan = job["plan"]
+        results = job["results_fn"]()  # item-level BatchTopK scoreboard
+        # one vectorized fold: per-group merged top-k + improvement streaks
+        res = plan.finalize(results)
+        for g, meta in enumerate(plan.group_meta):
+            kind = meta[0]
+            kg = int(plan.group_k[g])
+            if kind == "ret":
+                _, r, sn, clusters = meta
+                r.ret.topk = res.group_topk(g, kg)
+                r.ret.no_improve = int(res.no_improve[g])
+                r.ret.last_kth = float(res.last_kth[g])
+                r.ret.searched.extend(clusters)
+                r.ret._inflight = False  # type: ignore[attr-defined]
+                if sn is not None:
+                    self.dag.complete(sn)
+                if self.cfg.enable_early_term and not r.ret.done:
+                    if transforms.maybe_early_terminate(
+                            self.index, r, mode=self.cfg.early_term_mode,
+                            patience=self.cfg.early_term_patience):
+                        self.metrics.early_terms += 1
+                if r.ret.done:
+                    self._finish_ret_stage(r, now)
+            else:  # speculative warmup: results land in the LocalCache
+                _, r, emb, probed = meta
+                if r.sim_cache is None:
+                    r.sim_cache = LocalCache()
+                r.sim_cache.update(emb, res.group_topk(g, kg), self.index,
+                                   probed)
+                self.spec.stats.attempted_ret += 1

@@ -1,11 +1,23 @@
 from repro.retrieval.hotcache import AccessTracker, HotClusterCache, plan_memory_split
 from repro.retrieval.hybrid import HybridRetrievalEngine, engine_from_memory_budget
 from repro.retrieval.ivf import ClusterCostModel, IVFIndex, TopK
+from repro.retrieval.plan import (
+    BatchTopK,
+    PlanBuilder,
+    RetrievalPlan,
+    plan_from_work,
+    plan_search,
+)
 from repro.retrieval.synthetic import CorpusConfig, SyntheticEmbedder, make_corpus
 
 __all__ = [
     "IVFIndex",
     "TopK",
+    "BatchTopK",
+    "PlanBuilder",
+    "RetrievalPlan",
+    "plan_from_work",
+    "plan_search",
     "ClusterCostModel",
     "HotClusterCache",
     "AccessTracker",

@@ -72,6 +72,12 @@ class CacheStats:
     transit_blocked: int = 0
     swaps: int = 0
     updates: int = 0
+    # clusters refused residency because they exceed the device tile length
+    # (they would be silently truncated on the device path)
+    oversized_rejects: int = 0
+    # items whose snapshot said device but whose cluster was swapped out
+    # between dispatch and execution (host fallback, counted for honesty)
+    stale_fallbacks: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -82,9 +88,13 @@ class CacheStats:
 class HotClusterCache:
     """Device-resident cache of the hottest IVF clusters.
 
-    ``loader(cid) -> None`` is called when a cluster becomes resident; in the
-    real engine it device_puts the cluster tile into the cache slab.  Loads
-    become *visible* only ``transit_substages`` sub-stages later.
+    ``loader(cid, slot)`` is called when a cluster becomes resident; in the
+    real engine it stages the cluster tile into the cache slab (the device
+    mirror is delta-updated lazily).  A loader may *refuse* a cluster by
+    returning ``False`` — e.g. one larger than the device tile, which would
+    be silently truncated — in which case the slot is released and the
+    cluster stays on the host path (counted in ``stats.oversized_rejects``).
+    Loads become *visible* only ``transit_substages`` sub-stages later.
     """
 
     def __init__(
@@ -105,6 +115,7 @@ class HotClusterCache:
         self.stats = CacheStats()
         self._resident: dict[int, int] = {}  # cid -> slot
         self._transit: dict[int, int] = {}  # cid -> substages remaining
+        self._refused: set[int] = set()  # loader-refused (e.g. oversized)
         self._free_slots = list(range(self.capacity))
         self._substage = 0
 
@@ -128,6 +139,34 @@ class HotClusterCache:
         self.stats.misses += 1
         return False
 
+    def lookup_batch(self, cids: np.ndarray) -> np.ndarray:
+        """Vectorized ``lookup``: record all accesses at once and return a
+        per-item residency bool (False -> host path).  Equivalent to calling
+        ``lookup`` per item, without the Python loop over the tracker."""
+        ids = np.asarray(cids, np.int64)
+        self.tracker.record(ids)
+        if not self._resident and not self._transit:
+            self.stats.misses += int(ids.size)
+            return np.zeros(ids.shape, bool)
+        mask = self.resident_mask()
+        res = mask[ids]
+        transit = np.isin(ids, np.fromiter(self._transit, np.int64))
+        self.stats.transit_blocked += int(transit.sum())
+        self.stats.hits += int(res.sum())
+        self.stats.misses += int(ids.size - res.sum())
+        return res
+
+    def resident_mask(self) -> np.ndarray:
+        """Snapshot of device residency as a bool array over all clusters.
+        Taken at sub-stage *assembly* time by the backends so that the
+        charged duration and the executed host/device partition agree even
+        when swaps land in between (see SimBackend.search_charged)."""
+        mask = np.zeros(self.tracker.freq.shape[0], bool)
+        for cid in self._resident:
+            if cid not in self._transit:
+                mask[cid] = True
+        return mask
+
     @property
     def resident_ids(self) -> list[int]:
         return [c for c in self._resident if c not in self._transit]
@@ -149,10 +188,16 @@ class HotClusterCache:
 
     def _refresh(self) -> None:
         self.stats.updates += 1
-        want = set(int(c) for c in self.tracker.top(self.capacity))
+        # refused clusters (e.g. oversized for the device tile) are excluded
+        # from candidacy so they are rejected at most once and the slot they
+        # would pin goes to the next-hottest loadable cluster instead
+        ranked = [int(c) for c in
+                  self.tracker.top(self.capacity + len(self._refused))
+                  if int(c) not in self._refused][: self.capacity]
+        want = set(ranked)
         have = set(self._resident)
         evict = list(have - want)
-        load = [c for c in self.tracker.top(self.capacity) if int(c) not in have]
+        load = [c for c in ranked if c not in have]
         # evict first to free slots; eviction is instantaneous (drop only)
         for cid in evict:
             self._free_slots.append(self._resident.pop(cid))
@@ -160,13 +205,17 @@ class HotClusterCache:
         for cid in load:
             if not self._free_slots:
                 break
-            cid = int(cid)
             slot = self._free_slots.pop()
+            if self.loader is not None and self.loader(cid, slot) is False:
+                # loader refused: release the slot, remember the refusal,
+                # keep the cluster on the host path permanently
+                self._free_slots.append(slot)
+                self._refused.add(cid)
+                self.stats.oversized_rejects += 1
+                continue
             self._resident[cid] = slot
             self._transit[cid] = self.transit_substages
             self.stats.swaps += 1
-            if self.loader is not None:
-                self.loader(cid, slot)
 
 
 # ---------------------------------------------------------------------------

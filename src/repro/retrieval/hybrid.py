@@ -1,11 +1,23 @@
 """Hybrid host/device retrieval engine (paper §4.4, Fig. 11).
 
-Per sub-stage the engine receives a batch of (query, cluster, running-topk)
-work items spanning requests.  Items whose cluster is resident in the device
-hot cache are packed into query-groups and scanned by the fused Pallas kernel
-(jnp oracle off-TPU); the rest run on the host path.  Both paths share the
-``TopK`` merge, and the caller treats their runtimes as overlapped (they
-execute on different resources in the real system).
+Per sub-stage the engine receives a :class:`~repro.retrieval.plan.RetrievalPlan`
+— a structure-of-arrays batch of (query, cluster) probes spanning requests.
+The plan's segment table is partitioned at *cluster* granularity: segments
+whose cluster is resident in the device hot cache are packed into QB-aligned
+query-groups and scanned by the fused Pallas kernel (jnp oracle off-TPU);
+the rest run on the host GEMM path.  Both paths merge into the plan's shared
+``BatchTopK`` scoreboard, and the caller treats their runtimes as overlapped
+(they execute on different resources in the real system).
+
+Device-slab maintenance is incremental: cluster swaps stage tiles into the
+pinned host slab and mark the slot dirty; the jnp mirror is then *delta
+updated* with one batched index-update per sub-stage instead of re-uploading
+the whole slab (``stats()['uploads']`` reports full vs delta traffic).
+Clusters larger than the tile length are refused residency (they would be
+silently truncated on the device) and stay on the host path.
+
+The legacy per-item ``search_substage`` API is kept as a thin adapter over
+the plan executor.
 """
 from __future__ import annotations
 
@@ -17,6 +29,7 @@ import numpy as np
 
 from repro.retrieval.hotcache import HotClusterCache, capacity_from_bytes
 from repro.retrieval.ivf import IVFIndex, TopK
+from repro.retrieval.plan import BatchTopK, RetrievalPlan, plan_from_work
 
 QB = 8  # queries per device work group (sublane-aligned)
 
@@ -60,6 +73,7 @@ class HybridRetrievalEngine:
             )
             self._slab_ids = np.full((cache_capacity, self.tile_len), -1, np.int64)
             self._slab_valid = np.zeros((cache_capacity,), np.int32)
+            self._slot_cid = np.full((cache_capacity,), -1, np.int64)
         self.cache = HotClusterCache(
             index.n_clusters,
             cache_capacity,
@@ -68,99 +82,189 @@ class HybridRetrievalEngine:
             loader=self._load_cluster if cache_capacity else None,
         )
         self._device_slab = None  # lazily mirrored jnp copy
+        self._dirty_slots: set[int] = set()  # staged but not yet delta-uploaded
+        self._qbuf = np.zeros((0, QB, index.dim), np.float32)  # persistent
+        self.upload_stats = {"full": 0, "delta": 0, "delta_slots": 0}
 
     # ------------------------------------------------------------- cache load
-    def _load_cluster(self, cid: int, slot: int) -> None:
+    def _load_cluster(self, cid: int, slot: int) -> bool:
+        """Stage cluster ``cid`` into slab ``slot``; refuse oversized ones.
+
+        A cluster larger than ``tile_len`` cannot be represented on the
+        device without truncation (which would silently change top-k vs the
+        host path), so residency is refused and the cache keeps it host-side.
+        """
         lo, hi = int(self.index.offsets[cid]), int(self.index.offsets[cid + 1])
-        m = min(hi - lo, self.tile_len)
+        m = hi - lo
+        if m > self.tile_len:
+            return False
         self._slab[slot, :] = 0.0
-        self._slab[slot, :m] = self.index.flat[lo : lo + m]
+        self._slab[slot, :m] = self.index.flat[lo:hi]
         self._slab_ids[slot, :] = -1
-        self._slab_ids[slot, :m] = self.index.ids[lo : lo + m]
+        self._slab_ids[slot, :m] = self.index.ids[lo:hi]
         self._slab_valid[slot] = m
-        self._device_slab = None  # invalidate device mirror
+        self._slot_cid[slot] = cid
+        self._dirty_slots.add(int(slot))  # delta-upload on next device use
+        return True
 
     def _device_arrays(self):
+        """jnp mirror of the slab, maintained by per-slot delta uploads."""
+        jnp = self._jnp
         if self._device_slab is None:
             self._device_slab = (
-                self._jnp.asarray(self._slab),
-                self._jnp.asarray(self._slab_valid),
+                jnp.asarray(self._slab),
+                jnp.asarray(self._slab_valid),
             )
+            self.upload_stats["full"] += 1
+            self._dirty_slots.clear()
+        elif self._dirty_slots:
+            slots = np.fromiter(sorted(self._dirty_slots), np.int64)
+            ds, dv = self._device_slab
+            ds = ds.at[slots].set(jnp.asarray(self._slab[slots]))
+            dv = dv.at[slots].set(jnp.asarray(self._slab_valid[slots]))
+            self._device_slab = (ds, dv)
+            self.upload_stats["delta"] += 1
+            self.upload_stats["delta_slots"] += int(slots.size)
+            self._dirty_slots.clear()
         return self._device_slab
 
     # ---------------------------------------------------------------- search
+    def search_plan(
+        self,
+        plan: RetrievalPlan,
+        *,
+        resident: Optional[np.ndarray] = None,
+        timing: Optional[SubstageTiming] = None,
+    ) -> BatchTopK:
+        """Execute one plan: device path for resident-cluster segments, host
+        path for the rest, both merging into the item scoreboard.
+
+        ``resident`` is the residency snapshot (bool per cluster) taken when
+        the sub-stage was *dispatched*; passing it keeps the executed
+        partition consistent with the charged one even if swaps landed in
+        between.  Segments whose snapshot said device but whose cluster has
+        since been swapped out fall back to the host path (counted in
+        ``cache.stats.stale_fallbacks``).
+        """
+        out = BatchTopK.empty(plan.n_items, plan.k)
+        cur = self.cache.lookup_batch(plan.cluster_ids)  # records accesses
+        if resident is None:
+            # per-segment residency from the per-item lookup (items of a
+            # segment share one cluster, so its first item is representative)
+            seg_dev = cur[plan.seg_order[plan.seg_bounds[:-1]]]
+        else:
+            seg_dev = resident[plan.seg_cluster]
+        host_segs: list[int] = []
+        dev_segs: list[int] = []
+        for s in range(plan.n_segments):
+            if not seg_dev[s]:
+                host_segs.append(s)
+                continue
+            cid = int(plan.seg_cluster[s])
+            slot = self.cache._resident.get(cid)
+            if slot is None or self._slot_cid[slot] != cid:
+                # swapped out between dispatch and execution
+                self.cache.stats.stale_fallbacks += int(
+                    plan.segment_rows(s).size)
+                host_segs.append(s)
+            else:
+                dev_segs.append(s)
+
+        if dev_segs:
+            t0 = time.perf_counter()
+            n_dev = self._device_scan(plan, dev_segs, out)
+            if timing is not None:
+                timing.device_us = (time.perf_counter() - t0) * 1e6
+                timing.n_device_items = n_dev
+        if host_segs:
+            t0 = time.perf_counter()
+            self.index.scan_segments(plan, np.asarray(host_segs, np.int64), out)
+            if timing is not None:
+                timing.host_us = (time.perf_counter() - t0) * 1e6
+                timing.n_host_items = int(
+                    sum(plan.segment_rows(s).size for s in host_segs))
+
+        self.cache.end_substage()
+        return out
+
     def search_substage(
         self, work: Sequence[tuple[np.ndarray, int, TopK]]
     ) -> tuple[list[TopK], SubstageTiming]:
-        """Execute one sub-stage worth of (query, cluster, topk) items."""
+        """Legacy per-item API: adapt the work list to a plan and execute."""
         timing = SubstageTiming()
-        out: list[Optional[TopK]] = [None] * len(work)
-        host_items: list[int] = []
-        dev_items: list[int] = []
-        for i, (_, cid, _) in enumerate(work):
-            (dev_items if self.cache.lookup(int(cid)) else host_items).append(i)
+        if not work:
+            self.cache.end_substage()  # empty sub-stages still tick the clock
+            return [], timing
+        plan = plan_from_work(work)
+        res = plan.finalize(self.search_plan(plan, timing=timing))
+        return (
+            [res.group_topk(g, int(plan.group_k[g]))
+             for g in range(plan.n_groups)],
+            timing,
+        )
 
-        if dev_items:
-            t0 = time.perf_counter()
-            self._device_search([work[i] for i in dev_items], [out, dev_items])
-            timing.device_us = (time.perf_counter() - t0) * 1e6
-            timing.n_device_items = len(dev_items)
+    # ------------------------------------------------------------ device path
+    def _query_groups(self, n: int) -> np.ndarray:
+        """Persistent pre-packed query-group buffer (grown geometrically)."""
+        if self._qbuf.shape[0] < n:
+            cap = max(n, 2 * self._qbuf.shape[0], 8)
+            self._qbuf = np.zeros((cap, QB, self.index.dim), np.float32)
+        return self._qbuf
 
-        if host_items:
-            t0 = time.perf_counter()
-            res = self.index.search_cluster_batch([work[i] for i in host_items])
-            for i, r in zip(host_items, res):
-                out[i] = r
-            timing.host_us = (time.perf_counter() - t0) * 1e6
-            timing.n_host_items = len(host_items)
-
-        self.cache.end_substage()
-        return out, timing  # type: ignore[return-value]
-
-    def _device_search(self, items, sink) -> None:
-        """Pack resident-cluster items into (G, QB, d) groups + fused scan."""
+    def _device_scan(self, plan: RetrievalPlan, dev_segs, out: BatchTopK) -> int:
+        """Pack resident segments into (G, QB, d) groups + fused scan, then
+        one vectorized scatter-merge of all member rows."""
         from repro.kernels.ivf_scan import ivf_scan
 
-        out, idx_map = sink
         jnp = self._jnp
         slab, valid = self._device_arrays()
-        k = max(it[2].k for it in items)
-
-        # group by cluster slot, then chunk into QB-sized query groups
-        by_slot: dict[int, list[int]] = {}
-        for pos, (_, cid, _) in enumerate(items):
-            by_slot.setdefault(self.cache.slot_of(int(cid)), []).append(pos)
-        groups, gq, member = [], [], []
-        for slot, positions in by_slot.items():
-            for ofs in range(0, len(positions), QB):
-                chunk = positions[ofs : ofs + QB]
-                qs = np.zeros((QB, self.index.dim), np.float32)
-                for r, p in enumerate(chunk):
-                    qs[r] = items[p][0]
-                groups.append(slot)
-                gq.append(qs)
-                member.append(chunk)
-        q_groups = jnp.asarray(np.stack(gq))
-        g_slot = jnp.asarray(np.array(groups, np.int32))
-        dists, idx = ivf_scan(q_groups, g_slot, slab, valid, k, impl=self.kernel_impl)
-        dists = np.asarray(dists)
+        k = min(plan.k, self.tile_len)
+        g_slots: list[int] = []
+        g_rows: list[np.ndarray] = []
+        for s in dev_segs:
+            slot = int(self.cache.slot_of(int(plan.seg_cluster[s])))
+            rows = plan.segment_rows(s)
+            for ofs in range(0, rows.size, QB):
+                g_slots.append(slot)
+                g_rows.append(rows[ofs: ofs + QB])
+        G = len(g_slots)
+        qbuf = self._query_groups(G)
+        qbuf[:G] = 0.0
+        for g, rows in enumerate(g_rows):
+            qbuf[g, : rows.size] = plan.queries[rows]
+        slots_arr = np.asarray(g_slots, np.int32)
+        dists, idx = ivf_scan(
+            jnp.asarray(qbuf[:G]), jnp.asarray(slots_arr), slab, valid, k,
+            impl=self.kernel_impl)
+        dists = np.asarray(dists)  # (G, QB, k)
         idx = np.asarray(idx)
-        for g, chunk in enumerate(member):
-            slot = groups[g]
-            for r, p in enumerate(chunk):
-                local = idx[g, r]
-                ids = np.where(local >= 0, self._slab_ids[slot][np.maximum(local, 0)], -1)
-                keep = ids >= 0
-                tk = items[p][2]
-                out[idx_map[p]] = tk.merge(dists[g, r][keep], ids[keep])
+        # local row -> doc id for all groups at once
+        sid = self._slab_ids[slots_arr]  # (G, L)
+        ids = np.take_along_axis(
+            sid, np.maximum(idx, 0).reshape(G, -1), axis=1).reshape(idx.shape)
+        ids = np.where(idx >= 0, ids, -1)
+        # one scatter-merge over the real (non-padded) member rows
+        counts = [r.size for r in g_rows]
+        rows_flat = np.concatenate(g_rows)
+        sel_g = np.repeat(np.arange(G), counts)
+        sel_r = np.concatenate([np.arange(c) for c in counts])
+        out.merge_rows(rows_flat, dists[sel_g, sel_r], ids[sel_g, sel_r])
+        return int(rows_flat.size)
 
     # ---------------------------------------------------------------- stats
+    def resident_mask(self) -> np.ndarray:
+        """Residency snapshot for dispatch-time charging (bool per cluster)."""
+        return self.cache.resident_mask()
+
     def stats(self) -> dict:
         return {
             "hit_rate": self.cache.stats.hit_rate,
             "hits": self.cache.stats.hits,
             "misses": self.cache.stats.misses,
             "swaps": self.cache.stats.swaps,
+            "oversized_rejects": self.cache.stats.oversized_rejects,
+            "stale_fallbacks": self.cache.stats.stale_fallbacks,
+            "uploads": dict(self.upload_stats),
             "skew": self.cache.tracker.skewness_report(),
         }
 

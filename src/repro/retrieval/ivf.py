@@ -200,6 +200,94 @@ class IVFIndex:
                 out[i] = tk.merge(d[row], ids[row])
         return out  # type: ignore[return-value]
 
+    # ------------------------------------------------- plan (SoA) execution
+    def scan_segments(self, plan, seg_indices, out) -> None:
+        """Scan the given plan segments on the host path.
+
+        Per segment the cluster block is GEMM-scanned once against the
+        stacked queries of every item probing it (minimal FLOPs — no padded
+        columns).  The per-item top-k reduction is then done in *size
+        buckets*: segments of similar cluster size share one padded
+        candidate matrix and a single argpartition/sort, so the number of
+        numpy reductions scales with the size spread, not the segment count.
+
+        ``out`` is the plan's item-level :class:`BatchTopK` scoreboard; each
+        item belongs to exactly one segment, so its row is written once
+        (the rows passed here must still be in their empty state).
+        """
+        k = out.k
+        segs = np.asarray(seg_indices, np.int64)
+        if segs.size == 0:
+            return
+        # offsets / bucket layout vectorized over the selected segments;
+        # query rows are gathered per bucket (only the selected segments'
+        # items, not the whole plan)
+        los = self.offsets[plan.seg_cluster[segs]]
+        his = self.offsets[plan.seg_cluster[segs] + 1]
+        ms = (his - los).astype(np.int64)
+        sa = plan.seg_bounds[segs]
+        se = plan.seg_bounds[segs + 1]
+        nqs = (se - sa).astype(np.int64)
+        keep = (ms > 0) & (nqs > 0)
+        if not keep.all():
+            los, his, ms, sa, se, nqs = (
+                a[keep] for a in (los, his, ms, sa, se, nqs))
+        if ms.size == 0:
+            return
+        # bucket key: geometric size class (1.35x steps) — finer than pow2
+        # so the padded candidate width stays close to the true cluster
+        # size (the top-k partition cost is linear in padded width)
+        keys = np.ceil(np.log(ms) / np.log(1.35)).astype(np.int64)
+        for key in np.unique(keys):
+            pick = np.flatnonzero(keys == key)
+            width = max(int(ms[pick].max()), k)  # tight, not the pow2 key
+            n = int(nqs[pick].sum())
+            cand = np.full((n, width), np.inf, np.float32)
+            lo_row = np.repeat(los[pick], nqs[pick])
+            m_row = np.repeat(ms[pick], nqs[pick])
+            # item rows of the bucket = concat of the picked seg_order runs
+            nq_pick = nqs[pick]
+            flat_pos = (np.repeat(sa[pick], nq_pick) + np.arange(n)
+                        - np.repeat(np.cumsum(nq_pick) - nq_pick, nq_pick))
+            rows_all = plan.seg_order[flat_pos]
+            q_bucket = plan.queries[rows_all]
+            qn_bucket = plan.q_norms[rows_all]
+            at = 0
+            for i in pick:
+                lo, hi, m, nr = los[i], his[i], int(ms[i]), int(nqs[i])
+                # ||q||^2 - 2 q.x + ||x||^2, GEMM-ed straight into the
+                # bucket matrix (bit-identical to search_cluster)
+                d = cand[at: at + nr, :m]
+                np.matmul(q_bucket[at: at + nr], self.flat[lo:hi].T, out=d)
+                d *= -2.0
+                d += qn_bucket[at: at + nr, None]
+                d += self.flat_norms[lo:hi][None, :]
+                at += nr
+            if width > k:
+                sel = np.argpartition(cand, k - 1, axis=1)[:, :k]
+                cand = np.take_along_axis(cand, sel, axis=1)
+            else:
+                sel = np.broadcast_to(np.arange(width), cand.shape)
+            order = np.argsort(cand, axis=1, kind="stable")
+            sel = np.take_along_axis(sel, order, axis=1)
+            # doc ids straight from the flat store (pad columns -> -1),
+            # instead of materialising a full (n, width) id matrix
+            valid = sel < m_row[:, None]
+            flat_rows = np.minimum(lo_row[:, None] + sel, self.ids.shape[0] - 1)
+            out.dists[rows_all] = np.take_along_axis(cand, order, axis=1)
+            out.ids[rows_all] = np.where(valid, self.ids[flat_rows], -1)
+
+    def search_plan(self, plan, out=None):
+        """Execute a whole :class:`~repro.retrieval.plan.RetrievalPlan` on
+        the host path.  Returns the item-level ``BatchTopK`` scoreboard
+        (callers fold it per group via ``plan.finalize``)."""
+        from repro.retrieval.plan import BatchTopK
+
+        if out is None:
+            out = BatchTopK.empty(plan.n_items, plan.k)
+        self.scan_segments(plan, np.arange(plan.n_segments), out)
+        return out
+
     def search(
         self, q: np.ndarray, nprobe: int, k: int
     ) -> tuple[np.ndarray, np.ndarray]:
@@ -260,6 +348,13 @@ class ClusterCostModel:
 
     def cost_us(self, size: int, n_queries: int = 1) -> float:
         return self.fixed_us + self.per_vector_us * size + self.per_query_us * n_queries
+
+    def cost_vec_us(self, sizes: np.ndarray, n_queries: np.ndarray) -> np.ndarray:
+        """Per-cluster cost over a segment table: element-wise
+        ``fixed + per_vector * size + per_query * n_queries``."""
+        sizes = np.asarray(sizes, np.float64)
+        nq = np.asarray(n_queries, np.float64)
+        return self.fixed_us + self.per_vector_us * sizes + self.per_query_us * nq
 
     def batch_cost_us(self, sizes: np.ndarray, n_queries: int = 1) -> float:
         """Vectorized sum of cost_us over many clusters (one query each)."""

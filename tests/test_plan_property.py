@@ -1,0 +1,30 @@
+"""Hypothesis property test: plan executor == reference IVF search."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.retrieval.plan import plan_search  # noqa: E402
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+@given(
+    k=st.integers(1, 16),
+    nprobe=st.integers(1, 48),
+    n_q=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_search_plan_equals_reference_search(small_index, k, nprobe, n_q, seed):
+    """Property: plan-based search == reference ``IVFIndex.search`` for any
+    (nprobe, k, query batch): identical ids, distances within 1e-4."""
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((n_q, small_index.dim)).astype(np.float32)
+    D, I = small_index.search(q, nprobe, k)
+    D2, I2 = plan_search(small_index, q, nprobe, k)
+    np.testing.assert_array_equal(I2, I)
+    finite = np.isfinite(D)
+    np.testing.assert_allclose(D2[finite], D[finite], rtol=1e-4, atol=1e-4)
+    assert np.array_equal(np.isfinite(D2), finite)
