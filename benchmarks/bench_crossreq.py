@@ -1,0 +1,130 @@
+"""Cross-request coordination: duplicate-ratio x Zipf-skew x concurrency
+sweep of the crossreq layer (global semantic cache + in-flight dedup/fusion
++ popularity-aware replication) against the uncoordinated PR 2 loop.
+
+The workload models trending traffic: ``DuplicateTrafficEmbedder`` makes a
+``dup_ratio`` fraction of requests re-issue a canonical query from a small
+Zipf pool, with the workflow chosen per canonical query (same query -> same
+pipeline).  The serving regime is retrieval-bound (deep clusters, light
+generation), where duplicate scans are the dominant waste.
+
+Also verifies correctness: with lossless settings (cache answers off,
+triangle-bound early termination) and exact-only fusion, every fused
+subscriber's answer must equal an independently executed reference search.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, fixture
+from repro import workflows
+from repro.core.backends import SimBackend
+from repro.core.wavefront import SchedulerConfig
+from repro.retrieval import DuplicateTrafficEmbedder, HybridRetrievalEngine
+from repro.retrieval.ivf import ClusterCostModel
+from repro.server import Server
+from repro.serving.workload import WorkloadProfile, poisson_arrivals
+
+# retrieval-bound regime: deep clusters + light generation stages, so the
+# p50 is dominated by the segment scans the crossreq layer can coordinate
+RET_BOUND = ClusterCostModel(fixed_us=150.0, per_vector_us=20.0, per_query_us=2.0)
+NAMES = ["one-shot", "hyde", "irg", "multistep", "recomp"]
+
+CROSSREQ_KNOBS = dict(global_cache_size=256, dedup_threshold=0.95,
+                      replication_factor=2)
+
+
+def _serve(dup_ratio: float, *, crossreq: bool, zipf: float = 1.25,
+           nw: int = 2, rate: float = 70.0, n: int = 56, nprobe: int = 24,
+           hot_cache: int = 0, near_jitter: float = 0.0):
+    index, emb = fixture(zipf=zipf)
+    demb = DuplicateTrafficEmbedder(emb, dup_ratio=dup_ratio, pool_size=5,
+                                    near_jitter=near_jitter)
+    wl = WorkloadProfile(gen_tokens_mean=14.0, gen_tokens_sigma=0.25,
+                         prompt_tokens_mean=48.0)
+    hybrid = None
+    if hot_cache:
+        hybrid = HybridRetrievalEngine(index, cache_capacity=hot_cache,
+                                       update_interval=10,
+                                       transit_substages=1, kernel_impl="ref")
+    be = SimBackend(index, demb, hybrid=hybrid, cost_model=RET_BOUND,
+                    gen_step_base_us=600.0, gen_step_per_seq_us=20.0)
+    kw = dict(CROSSREQ_KNOBS) if crossreq else {}
+    s = Server(index, demb, mode="hedra", backend=be, workload=wl,
+               nprobe=nprobe, topk=5, num_ret_workers=nw, **kw)
+    for i, t in enumerate(poisson_arrivals(rate, n, seed=5)):
+        # duplicate requests share the canonical query's workflow
+        name = NAMES[demb.canonical_id(i) % len(NAMES)]
+        s.add_request(f"q{i}", workflows.build(name), arrival_us=t)
+    m = s.run()
+    return s, m
+
+
+def _counters(m) -> str:
+    return (f"_gcache={m.global_cache_answers}"
+            f"_seeds={m.global_cache_seeds}"
+            f"_fused={m.dedup_fanout}"
+            f"_saved_ms={m.dedup_saved_us / 1e3:.0f}"
+            f"_routes={m.replica_routes}"
+            f"_oversized={m.cache_stats.get('oversized_rejects', 0)}"
+            f"_stale={m.cache_stats.get('stale_fallbacks', 0)}"
+            f"_repl_loads={m.cache_stats.get('replica_loads', 0)}")
+
+
+def _verify_exact_fusion(index, embedder) -> int:
+    """Exact-only fusion under lossless settings: every duplicate request's
+    first retrieval output must equal the reference IVF search."""
+    demb = DuplicateTrafficEmbedder(embedder, dup_ratio=0.7, pool_size=2)
+    cfg = SchedulerConfig.preset(
+        "hedra", nprobe=12, topk=5, num_ret_workers=2,
+        enable_cache_answer=False, early_term_mode="lossless",
+        dedup_threshold=1.0)
+    be = SimBackend(index, demb, cost_model=RET_BOUND)
+    s = Server(index, demb, backend=be, config=cfg)
+    for i, t in enumerate(poisson_arrivals(300.0, 16, seed=7)):
+        s.add_request(f"q{i}", workflows.build("one-shot"), arrival_us=t)
+    m = s.run()
+    assert m.finished == 16
+    assert m.dedup_fanout > 0, "exact fusion never fired in verify config"
+    for r in s.sched.done:
+        qv = demb.embed_query(r.request_id, 0)
+        _, ref_ids = index.search(qv[None], nprobe=cfg.nprobe, k=5)
+        got = r.state["docs"]
+        assert got == [int(x) for x in ref_ids[0][: len(got)]], (
+            f"request {r.request_id}: fused answer diverged from the "
+            f"independently executed search")
+    return int(m.dedup_fanout)
+
+
+def run(quick: bool = True) -> None:
+    index, embedder = fixture(zipf=1.25)
+    fused = _verify_exact_fusion(index, embedder)
+    emit("crossreq_exact_fusion_verified", 0.0, f"fanout={fused}_ok=1")
+
+    dups = [0.0, 0.3, 0.6] if quick else [0.0, 0.3, 0.45, 0.6]
+    sweeps = [(1.25, 70.0)] if quick else [(1.25, 70.0), (1.25, 40.0),
+                                           (1.1, 70.0)]
+    for zipf, rate in sweeps:
+        for dup in dups:
+            _, m0 = _serve(dup, crossreq=False, zipf=zipf, rate=rate)
+            _, m1 = _serve(dup, crossreq=True, zipf=zipf, rate=rate)
+            s0, s1 = m0.summary(), m1.summary()
+            sp = s0["p50_latency_ms"] / max(s1["p50_latency_ms"], 1e-9)
+            emit(f"crossreq_dup{int(dup * 100)}_zipf{zipf}_rps{int(rate)}",
+                 s1["p50_latency_ms"] * 1e3,
+                 f"p50_off_ms={s0['p50_latency_ms']:.0f}"
+                 f"_p50_on_ms={s1['p50_latency_ms']:.0f}"
+                 f"_speedup={sp:.2f}x" + _counters(m1))
+
+    # near-duplicate traffic: fused answers come tolerance-bounded from the
+    # leader (cosine >= dedup threshold), like an O1 cache answer
+    _, m = _serve(0.45, crossreq=True, near_jitter=0.04)
+    emit("crossreq_near_dup45", m.summary()["p50_latency_ms"] * 1e3,
+         f"near={m.dedup_near}_exact={m.dedup_exact}" + _counters(m))
+
+    # replicated hot-cluster residency on the device cache: replica loads
+    # and replica-aware routing under the same skewed workload
+    _, m = _serve(0.3, crossreq=True, nw=4, hot_cache=12)
+    emit("crossreq_replication_nw4", m.summary()["p50_latency_ms"] * 1e3,
+         f"replicated={m.cache_stats.get('replicated_clusters', 0)}"
+         + _counters(m))

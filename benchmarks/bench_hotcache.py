@@ -33,7 +33,9 @@ def run(quick: bool = True) -> None:
         speedup = m0["avg_latency_ms"] / max(m["avg_latency_ms"], 1e-9)
         emit(f"hotcache_frac{int(frac*100)}", m["avg_latency_ms"] * 1e3,
              f"hit_rate={st['hit_rate']:.2f}_speedup={speedup:.2f}"
-             f"_swaps={st['swaps']}")
+             f"_swaps={st['swaps']}"
+             f"_oversized={m['cache_oversized_rejects']}"
+             f"_stale={m['cache_stale_fallbacks']}")
         if frac == fracs[-1]:
             emit("hotcache_skew", 0.0,
                  "_".join(f"{k}={v:.2f}" for k, v in st["skew"].items()))

@@ -7,7 +7,11 @@ qwen3 model, retrieval runs against the IVF index with the hot-cluster cache
 (jnp kernel-ref path), and the wavefront scheduler coordinates both.
 
 Run:  PYTHONPATH=src python examples/serve_rag_e2e.py
+      PYTHONPATH=src python examples/serve_rag_e2e.py --crossreq   # + the
+      cross-request layer: global semantic cache, in-flight query dedup
+      (duplicate prompts fuse into one retrieval), replica routing knobs
 """
+import argparse
 import os
 import sys
 import time
@@ -37,17 +41,29 @@ def tokenize(text: str, vocab: int) -> np.ndarray:
             % (vocab - 2)) + 1
 
 
-def main() -> None:
-    docs, _, topics = make_corpus(CorpusConfig(n_docs=8_000, dim=48,
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--crossreq", action="store_true",
+                    help="enable the cross-request layer (global semantic "
+                         "cache + in-flight query dedup/fusion + replica "
+                         "routing knobs)")
+    ap.add_argument("--n-requests", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for the example smoke test")
+    args = ap.parse_args(argv)
+
+    n_docs, n_clusters, max_len = (2_000, 12, 96) if args.smoke else (8_000, 32, 192)
+    docs, _, topics = make_corpus(CorpusConfig(n_docs=n_docs, dim=48,
                                                n_topics=64))
-    index = IVFIndex.build(docs, n_clusters=32, iters=4)
+    index = IVFIndex.build(docs, n_clusters=n_clusters, iters=4)
     embedder = SyntheticEmbedder(topics)
     hybrid = HybridRetrievalEngine(index, cache_capacity=8, update_interval=10,
                                    kernel_impl="ref")
 
     cfg = get_config("qwen3-1.7b").reduced()
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    engine = GenerationEngine(cfg, params, max_batch=8, max_len=192, eos_id=0)
+    engine = GenerationEngine(cfg, params, max_batch=8, max_len=max_len,
+                              eos_id=0)
 
     backend = RealBackend(engine, index, embedder, hybrid=hybrid)
 
@@ -64,8 +80,15 @@ def main() -> None:
     backend.gen_duration = gen_duration
     _pending_prompts: list[str] = []
 
-    server = Server(index, embedder, mode="hedra", backend=backend, nprobe=8)
-    queries = [f"what is retrieval augmented generation {i}?" for i in range(8)]
+    crossreq_kw = {}
+    if args.crossreq:
+        # replication needs a worker pool (> 1) to have replica holders
+        crossreq_kw = dict(global_cache_size=64, dedup_threshold=0.95,
+                           replication_factor=2, num_ret_workers=2)
+    server = Server(index, embedder, mode="hedra", backend=backend, nprobe=8,
+                    **crossreq_kw)
+    n = args.n_requests
+    queries = [f"what is retrieval augmented generation {i}?" for i in range(n)]
     for i, q in enumerate(queries):
         _pending_prompts.append(q)
         server.add_request(q, workflows.build("one-shot" if i % 2 else "hyde"),
@@ -79,6 +102,9 @@ def main() -> None:
     for k, v in metrics.summary().items():
         print(f"  {k:24s} {v}")
     print("hot-cache stats:", hybrid.stats())
+    if args.crossreq:
+        print("crossreq report:", server.crossreq_report())
+    assert metrics.finished == n, f"finished {metrics.finished}/{n}"
 
 
 if __name__ == "__main__":

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core.ragraph import GenerationNode, RetrievalNode
 from repro.core.runtime import GenProgress, RequestContext, RetProgress, RuntimeDAG
+from repro.core import similarity
 from repro.core.similarity import LocalCache
 from repro.core.speculation import SpeculationPolicy, Speculator
 from repro.core.substage import TimeBudget
@@ -59,6 +60,18 @@ class SchedulerConfig:
     slo_us: float = 10e6  # default; overridden per-request via RequestContext
     num_ret_workers: int = 1
     dispatch_policy: str = "affinity"  # affinity | least_loaded | round_robin
+    # --- cross-request coordination (repro.crossreq); all off by default,
+    # in which case serving results are bit-identical to the uncoordinated
+    # loop.  global_cache_size > 0 enables the shared semantic cache;
+    # dedup_threshold > 0 enables in-flight query fusion in hedra mode
+    # (1.0 = exact duplicates only, < 1.0 adds cosine-similar
+    # near-duplicates, which are answered from the leader's result like an
+    # O1 cache answer and are additionally gated by enable_cache_answer);
+    # replication_factor > 1 replicates hot clusters across workers and
+    # routes to replica holders (affinity policy, num_ret_workers > 1).
+    global_cache_size: int = 0
+    dedup_threshold: float = 0.0
+    replication_factor: int = 1
 
     @classmethod
     def preset(cls, mode: str, **kw) -> "SchedulerConfig":
@@ -99,6 +112,16 @@ class Metrics:
     spec_ret_launches: int = 0
     straggler_redispatches: int = 0
     slo_violations: int = 0
+    # cross-request coordination counters (all zero with crossreq disabled)
+    global_cache_answers: int = 0
+    global_cache_seeds: int = 0
+    dedup_exact: int = 0
+    dedup_near: int = 0
+    dedup_fanout: int = 0
+    dedup_saved_us: float = 0.0
+    replica_routes: int = 0
+    # hybrid-engine CacheStats snapshot, populated at the end of run()
+    cache_stats: dict = dataclasses.field(default_factory=dict)
 
     @property
     def ret_busy_us(self) -> float:
@@ -133,6 +156,24 @@ class Metrics:
             "spec_ret_launches": self.spec_ret_launches,
             "straggler_redispatches": self.straggler_redispatches,
             "slo_violations": self.slo_violations,
+            "global_cache_answers": self.global_cache_answers,
+            "global_cache_seeds": self.global_cache_seeds,
+            "dedup_exact": self.dedup_exact,
+            "dedup_near": self.dedup_near,
+            "dedup_fanout": self.dedup_fanout,
+            "dedup_saved_ms": float(self.dedup_saved_us / 1e3),
+            "replica_routes": self.replica_routes,
+            # hybrid-engine counters, surfaced so benches/--json records see
+            # them without reaching into the backend
+            "cache_hit_rate": float(self.cache_stats.get("hit_rate", 0.0)),
+            "cache_oversized_rejects": int(
+                self.cache_stats.get("oversized_rejects", 0)),
+            "cache_stale_fallbacks": int(
+                self.cache_stats.get("stale_fallbacks", 0)),
+            "cache_replica_loads": int(
+                self.cache_stats.get("replica_loads", 0)),
+            "cache_replicated_clusters": int(
+                self.cache_stats.get("replicated_clusters", 0)),
         }
 
 
@@ -149,9 +190,29 @@ class WavefrontScheduler:
         self.budget = TimeBudget()
         self.spec = Speculator(config.speculation)
         self.num_ret_workers = max(1, int(config.num_ret_workers))
+        # cross-request coordination layer (repro.crossreq): built only when
+        # a knob enables it, so the disabled path stays bit-identical
+        self.crossreq = None
+        self._merge_unique = None
+        if (config.global_cache_size > 0 or config.dedup_threshold > 0.0
+                or config.replication_factor > 1):
+            from repro.crossreq import CrossRequestCoordinator
+            from repro.crossreq.globalcache import merge_unique
+
+            self.crossreq = CrossRequestCoordinator(
+                config, index, self.num_ret_workers)
+            self._merge_unique = merge_unique
+            hyb = getattr(backend, "hybrid", None)
+            if (hyb is not None and config.replication_factor > 1
+                    and self.num_ret_workers > 1):
+                self.crossreq.attach_cache(
+                    hyb.cache, self.num_ret_workers,
+                    config.replication_factor)
         self.dispatcher = dispatch_mod.RetrievalDispatcher(
             self.num_ret_workers, index.n_clusters,
-            policy=config.dispatch_policy)
+            policy=config.dispatch_policy,
+            tracker=self.crossreq.tracker if self.crossreq else None,
+            replica_map=self.crossreq.replicas if self.crossreq else None)
         self.metrics = Metrics()
         self.metrics.ret_busy_per_worker = [0.0] * self.num_ret_workers
         self.pending: list[RequestContext] = []
@@ -217,6 +278,29 @@ class WavefrontScheduler:
                     if rep["cache_answer"]:
                         # cache answers disabled: restore full queue
                         req.ret.answered_from_cache = False
+                # cross-request semantic cache: conclusive answer (exact-key
+                # or O1 ball bound), else inherit the nearest hot entry's
+                # H_v/C_v when this request has no local history of its own
+                if (self.crossreq is not None
+                        and self.crossreq.global_cache is not None
+                        and not req.ret.done):
+                    ans, ent = self.crossreq.global_cache.consult(
+                        req.ret.query_vec, req.ret.k, req.ret.nprobe,
+                        allow_answer=self.cfg.enable_cache_answer,
+                        allow_seed=self.cfg.enable_reorder and (
+                            req.sim_cache is None or req.sim_cache.empty))
+                    if ans is not None:
+                        req.ret.topk = req.ret.topk.merge(*ans)
+                        req.ret.answered_from_cache = True
+                        req.ret.cluster_queue = []
+                        self.metrics.global_cache_answers += 1
+                        self._finish_ret_stage(req, now)
+                        continue  # advanced; maybe next stage is instant too
+                    if ent is not None:
+                        seeded = similarity.reorder_clusters(
+                            req.ret.cluster_queue, ent)
+                        req.ret.cluster_queue = seeded.order
+                        self.metrics.global_cache_seeds += 1
                 if not self.cfg.mode == "hedra":
                     self._ret_fifo.append(req)
             return
@@ -232,6 +316,8 @@ class WavefrontScheduler:
             self.budget.observe_retrieval_stage(now - req.ret.started_at)
         req.round_idx += 1
         req.log(now, "ret_stage_done", node.node_id)
+        if self.crossreq is not None:
+            self._crossreq_stage_done(req, now)
         # speculation resolution (dependency rewiring)
         if req.gen is not None and req.gen.speculative_src is not None:
             self.metrics.spec_gen_attempts += 1
@@ -268,6 +354,43 @@ class WavefrontScheduler:
             self._enter_stage(req, now)
         else:
             self._finish_request(req, now)
+
+    def _crossreq_stage_done(self, req: RequestContext, now: float) -> None:
+        """Cross-request hooks at retrieval-stage completion: publish the
+        finished search into the global cache (stages that actually
+        searched — cache-answered and fanned-out stages carry no new
+        information), then fan the merged top-k out to every fused
+        subscriber so their stages complete at the same instant."""
+        cr = self.crossreq
+        ret = req.ret
+        if (cr.global_cache is not None and ret.searched
+                and not ret.answered_from_cache):
+            wide = getattr(ret, "_wide_topk", None)
+            cr.global_cache.insert(ret.query_vec,
+                                   wide if wide is not None else ret.topk,
+                                   self.index, list(ret.searched), ret.nprobe)
+        if cr.fusion is None:
+            return
+        final = ret.topk
+        searched = list(ret.searched)
+        for sub, kind in cr.fusion.complete_leader(req.request_id):
+            if sub.finished or sub.ret is None or sub.ret.done:
+                continue
+            k = sub.ret.k
+            sub.ret.topk = TopK(k, final.dists[:k].copy(),
+                                final.ids[:k].copy())
+            if kind == "near":
+                # the fanned-out distances are relative to the *leader's*
+                # query; record that query in the subscriber's LocalCache
+                # so the next round's O1 ball bound stays sound instead of
+                # silently compounding the single-hop fusion tolerance
+                sub.ret.query_vec = ret.query_vec.copy()
+            sub.ret.searched = list(searched)
+            sub.ret.answered_from_cache = True
+            sub.ret.cluster_queue = []
+            sub.ret._inflight = False  # type: ignore[attr-defined]
+            self.metrics.dedup_fanout += 1
+            self._finish_ret_stage(sub, now)
 
     def _finish_gen_stage(self, req: RequestContext, now: float) -> None:
         node = req.node
@@ -349,6 +472,10 @@ class WavefrontScheduler:
 
     def _assemble_ret(self, now: float, idle: list[int]) -> dict:
         """Assemble retrieval jobs for the idle workers; returns {wid: job}."""
+        if self.crossreq is not None:
+            # decay the shared popularity histogram and refresh the replica
+            # map once per assembly cycle
+            self.crossreq.tick()
         if self.cfg.mode == "hedra":
             return self._assemble_ret_substage(now, idle)
         return self._assemble_ret_coarse(now, idle)
@@ -364,7 +491,19 @@ class WavefrontScheduler:
     def _add_ret_group(self, builder: PlanBuilder, r: RequestContext,
                        clusters, sn) -> None:
         """One plan group per request sub-stage, seeded with the running
-        top-k and the early-termination streak state at assembly time."""
+        top-k and the early-termination streak state at assembly time.
+        A fused leader's group carries its current subscriber fan-out so
+        the backend charges the group once for the whole set."""
+        fanout = 1
+        out_k = None
+        if self.crossreq is not None:
+            if self.crossreq.fusion is not None:
+                fanout = self.crossreq.fusion.fanout(r.request_id)
+            if self.crossreq.global_cache is not None:
+                # widen the scoreboard (not group_k: streaks and returned
+                # results are untouched) so the stage can publish a top-k'
+                # entry to the global cache at no extra scan cost
+                out_k = max(r.ret.topk.k, SPEC_RET_K)
         builder.add(
             r.ret.query_vec, clusters,
             k=r.ret.topk.k,
@@ -372,6 +511,8 @@ class WavefrontScheduler:
             seed=r.ret.topk,
             last_kth=r.ret.last_kth,
             no_improve=r.ret.no_improve,
+            fanout=fanout,
+            out_k=out_k,
         )
 
     def _assemble_ret_substage(self, now: float, idle: list[int]) -> dict:
@@ -384,7 +525,10 @@ class WavefrontScheduler:
         ready = [r for r in self.active
                  if r.ret is not None and not r.ret.done
                  and not getattr(r.ret, "_inflight", False)]
-        for r in self._slack_order(ready, now):
+        ordered = self._slack_order(ready, now)
+        if self.crossreq is not None and self.crossreq.fusion is not None:
+            ordered = self._fuse_wavefront(ordered)
+        for r in ordered:
             sn = transforms.split_retrieval_next(
                 self.dag, r, self.budget, cm, self._cluster_sizes,
             )
@@ -407,6 +551,32 @@ class WavefrontScheduler:
                                        meta=("spec", r, emb, probes))
         return {wid: self._finalize_ret_job(now, wid, builders[wid].build())
                 for wid in idle if not builders[wid].empty}
+
+    def _fuse_wavefront(self, ordered: list) -> list:
+        """In-flight dedup/fusion pass: a *fresh* retrieval stage whose query
+        matches an executing leader's (exact byte hash, or cosine >= the
+        dedup threshold) subscribes to the leader's result instead of
+        assembling its own sub-stages; the rest proceed, with fresh stages
+        registered as matchable leaders.  Subscribers are parked in-flight
+        and completed by the leader's fan-out."""
+        fusion = self.crossreq.fusion
+        allow_near = self.cfg.enable_cache_answer
+        out = []
+        for r in ordered:
+            if r.ret.searched:  # mid-stage: already executing, cannot fuse
+                out.append(r)
+                continue
+            kind = fusion.try_subscribe(r, allow_near=allow_near)
+            if kind is not None:
+                r.ret._inflight = True  # type: ignore[attr-defined]
+                if kind == "exact":
+                    self.metrics.dedup_exact += 1
+                else:
+                    self.metrics.dedup_near += 1
+                continue
+            fusion.register_leader(r)
+            out.append(r)
+        return out
 
     def _assemble_ret_coarse(self, now: float, idle: list[int]) -> dict:
         """Whole-stage jobs: sequential = FIFO-1, async = batch-all-queued.
@@ -564,10 +734,21 @@ class WavefrontScheduler:
             for wid in range(nw):
                 job = ret_jobs[wid]
                 if job and job["end"] <= now:
-                    self.metrics.ret_busy_per_worker[wid] += job["dur"]
+                    # the dispatcher is the single policy-side load source;
+                    # Metrics mirrors its completed share instead of
+                    # double-booking an accumulator of its own
+                    self.dispatcher.note_complete(wid, job["dur"])
+                    self.metrics.ret_busy_per_worker[wid] = (
+                        self.dispatcher.workers[wid].completed_us)
                     self._complete_ret(job, now)
                     ret_jobs[wid] = None
         self.metrics.sim_time_us = now
+        hyb = getattr(self.backend, "hybrid", None)
+        if hyb is not None:
+            self.metrics.cache_stats = hyb.stats()
+        self.metrics.replica_routes = self.dispatcher.replica_routes
+        self.metrics.dedup_saved_us = float(
+            getattr(self.backend, "fused_saved_us", 0.0))
         return self.metrics
 
     # ----------------------------------------------------------- completion
@@ -599,6 +780,18 @@ class WavefrontScheduler:
             if kind == "ret":
                 _, r, sn, clusters = meta
                 r.ret.topk = res.group_topk(g, kg)
+                if (self.crossreq is not None
+                        and self.crossreq.global_cache is not None
+                        and plan.k > kg):
+                    # accumulate the widened top-k' entry for the global
+                    # cache across the stage's sub-stages (the scoreboard
+                    # row is plan.k wide thanks to the out_k widening); id
+                    # dedup keeps the shared seed prefix from duplicating
+                    row = res.group_topk(g, plan.k)
+                    prev = getattr(r.ret, "_wide_topk", None)
+                    r.ret._wide_topk = (  # type: ignore[attr-defined]
+                        row if prev is None
+                        else self._merge_unique(prev, row, plan.k))
                 r.ret.no_improve = int(res.no_improve[g])
                 r.ret.last_kth = float(res.last_kth[g])
                 r.ret.searched.extend(clusters)

@@ -1,0 +1,172 @@
+"""In-flight query dedup/fusion across a wavefront (paper §4.4's skewness
+observation applied to the *query* stream).
+
+At production concurrency, N near-identical retrieval stages from different
+users routinely sit in the same wavefront.  Without coordination each one
+charges its own segment scans.  The fusion pass clusters pending retrieval
+sub-stages by query similarity and fuses lookalikes into one executing
+group:
+
+* the first request of a group (in SLO-slack order) is the **leader** — its
+  sub-stages dispatch normally and carry ``fanout = 1 + n_subscribers`` so
+  backends can account the charge once per fused group;
+* **subscribers** are parked (never assembled); when the leader's stage
+  completes, its merged top-k rows fan out to every subscriber and their
+  stages complete at the same instant.
+
+Two matching tiers:
+
+* **exact** — identical query bytes + (k, nprobe): byte-hash fast path.
+  The subscriber receives the leader's answer for *the same query*; under
+  result-preserving settings (lossless early termination, cache answers
+  off) that is bit-identical to executing the subscriber independently —
+  verified in ``bench_crossreq`` and ``tests/test_crossreq.py``.  Under
+  the default heuristic early termination, leader and independent
+  execution are both approximations of the same reference search (their
+  searched prefixes may differ), so the fused answer is one of those
+  approximations, not a bitwise replay of the other;
+* **near** — cosine similarity >= ``threshold`` within the same (k, nprobe)
+  bucket: the subscriber is answered *from the leader's result* with the
+  same tolerance semantics as an O1 cache answer (returned distances are to
+  the leader's query; the error is bounded by the leader-subscriber query
+  distance via the triangle inequality).  The subscriber's LocalCache
+  records the leader's query vector with those distances, keeping the next
+  round's ball bound sound.
+
+A leader stays matchable while its stage is in flight, so duplicates
+arriving a few cycles late still fuse instead of re-scanning.  Fusion runs
+in the hedra sub-stage assembly path only — the coarse async/sequential
+baselines model systems without cross-request coordination.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FusionStats:
+    exact_subscribed: int = 0
+    near_subscribed: int = 0
+    leaders_registered: int = 0
+    groups_fused: int = 0  # leader completions that had >= 1 subscriber
+    fanout_total: int = 0
+
+
+@dataclasses.dataclass
+class _Leader:
+    rid: int
+    req: object
+    key: bytes
+    bucket: tuple[int, int]  # (k, nprobe)
+    unit_vec: np.ndarray
+
+
+class FusionPass:
+    """Clusters pending retrieval sub-stages by query similarity and tracks
+    leader -> subscriber groups while the leader's stage is in flight."""
+
+    def __init__(self, threshold: float):
+        if not 0.0 < threshold <= 1.0:
+            raise ValueError("dedup threshold must be in (0, 1]")
+        self.threshold = float(threshold)
+        self.stats = FusionStats()
+        self._leaders: dict[int, _Leader] = {}  # rid -> leader record
+        self._by_key: dict[bytes, int] = {}  # exact query key -> leader rid
+        # (k, nprobe) -> {rid: unit query vec}; near matches only compare
+        # within a bucket so fused answers keep the subscriber's k/nprobe
+        self._buckets: dict[tuple[int, int], dict[int, np.ndarray]] = {}
+        self._subs: dict[int, list[tuple[object, str]]] = {}
+
+    @property
+    def n_inflight_leaders(self) -> int:
+        return len(self._leaders)
+
+    @staticmethod
+    def _key(req) -> bytes:
+        r = req.ret
+        return (np.asarray(r.query_vec, np.float32).tobytes()
+                + np.array([r.k, r.nprobe], np.int64).tobytes())
+
+    # ---------------------------------------------------------------- matching
+    def try_subscribe(self, req, *, allow_near: bool) -> Optional[str]:
+        """Attach ``req``'s fresh retrieval stage to an in-flight leader.
+        Returns 'exact' / 'near', or None when no leader matches."""
+        key = self._key(req)
+        lead = self._by_key.get(key)
+        if lead is not None and lead != req.request_id:
+            self._subs[lead].append((req, "exact"))
+            self.stats.exact_subscribed += 1
+            return "exact"
+        if not allow_near or self.threshold >= 1.0:
+            return None
+        bucket = self._buckets.get((req.ret.k, req.ret.nprobe))
+        if not bucket:
+            return None
+        q = np.asarray(req.ret.query_vec, np.float64)
+        q = q / max(float(np.linalg.norm(q)), 1e-12)
+        rids = [r for r in bucket if r != req.request_id]
+        if not rids:
+            return None
+        mat = np.stack([bucket[r] for r in rids])
+        cos = mat @ q
+        j = int(np.argmax(cos))
+        if float(cos[j]) < self.threshold:
+            return None
+        self._subs[rids[j]].append((req, "near"))
+        self.stats.near_subscribed += 1
+        return "near"
+
+    def register_leader(self, req) -> None:
+        """Make ``req`` the executing leader for its query; later lookalikes
+        subscribe until the stage completes."""
+        rid = req.request_id
+        if rid in self._leaders:
+            return
+        key = self._key(req)
+        q = np.asarray(req.ret.query_vec, np.float64)
+        unit = q / max(float(np.linalg.norm(q)), 1e-12)
+        bucket = (req.ret.k, req.ret.nprobe)
+        self._leaders[rid] = _Leader(rid, req, key, bucket, unit)
+        self._by_key.setdefault(key, rid)
+        self._buckets.setdefault(bucket, {})[rid] = unit
+        self._subs.setdefault(rid, [])
+        self.stats.leaders_registered += 1
+
+    def fanout(self, rid: int) -> int:
+        """1 + current subscriber count (1 when ``rid`` is not a leader)."""
+        return 1 + len(self._subs.get(rid, ()))
+
+    # -------------------------------------------------------------- completion
+    def complete_leader(self, rid: int) -> list[tuple[object, str]]:
+        """Leader's stage finished: drop the group and hand back the
+        subscribers for fan-out.  No-op (empty list) for non-leaders."""
+        lead = self._leaders.pop(rid, None)
+        if lead is None:
+            return []
+        if self._by_key.get(lead.key) == rid:
+            del self._by_key[lead.key]
+        bucket = self._buckets.get(lead.bucket)
+        if bucket is not None:
+            bucket.pop(rid, None)
+            if not bucket:
+                del self._buckets[lead.bucket]
+        subs = self._subs.pop(rid, [])
+        if subs:
+            self.stats.groups_fused += 1
+            self.stats.fanout_total += len(subs)
+        return subs
+
+    # ------------------------------------------------------------------ stats
+    def report(self) -> dict:
+        s = self.stats
+        return {
+            "exact_subscribed": s.exact_subscribed,
+            "near_subscribed": s.near_subscribed,
+            "leaders_registered": s.leaders_registered,
+            "groups_fused": s.groups_fused,
+            "fanout_total": s.fanout_total,
+            "inflight_leaders": self.n_inflight_leaders,
+        }

@@ -8,7 +8,12 @@ from repro.retrieval.plan import (
     plan_from_work,
     plan_search,
 )
-from repro.retrieval.synthetic import CorpusConfig, SyntheticEmbedder, make_corpus
+from repro.retrieval.synthetic import (
+    CorpusConfig,
+    DuplicateTrafficEmbedder,
+    SyntheticEmbedder,
+    make_corpus,
+)
 
 __all__ = [
     "IVFIndex",
@@ -27,4 +32,5 @@ __all__ = [
     "CorpusConfig",
     "make_corpus",
     "SyntheticEmbedder",
+    "DuplicateTrafficEmbedder",
 ]

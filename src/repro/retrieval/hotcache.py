@@ -78,6 +78,9 @@ class CacheStats:
     # items whose snapshot said device but whose cluster was swapped out
     # between dispatch and execution (host fallback, counted for honesty)
     stale_fallbacks: int = 0
+    # extra (non-primary) replica copies staged for hot clusters when
+    # popularity-aware replication is enabled
+    replica_loads: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -95,6 +98,14 @@ class HotClusterCache:
     be silently truncated — in which case the slot is released and the
     cluster stays on the host path (counted in ``stats.oversized_rejects``).
     Loads become *visible* only ``transit_substages`` sub-stages later.
+
+    Cross-request extensions (``repro.crossreq``): ``replication > 1``
+    stages the hottest clusters into multiple slots on distinct owner
+    workers (slot *s* belongs to worker ``s % num_owners``) so the
+    dispatcher can route hot-cluster sub-stages to any replica holder; a
+    ``shared_tracker`` (the pool-global :class:`PopularityTracker`)
+    supersedes the cache's own access EMA as the refresh ranking source.
+    Both default off, leaving behaviour identical to the single-owner cache.
     """
 
     def __init__(
@@ -106,15 +117,26 @@ class HotClusterCache:
         transit_substages: int = 2,
         decay: float = 0.98,
         loader: Optional[Callable[[int, int], None]] = None,
+        replication: int = 1,
+        num_owners: int = 1,
+        shared_tracker=None,
     ):
         self.tracker = AccessTracker(n_clusters, decay=decay)
         self.capacity = int(capacity)
         self.update_interval = update_interval
         self.transit_substages = transit_substages
         self.loader = loader
+        self.replication = max(1, int(replication))
+        self.num_owners = max(1, int(num_owners))
+        # ticked by its owner (the scheduler), never by this cache
+        self.shared_tracker = shared_tracker
         self.stats = CacheStats()
-        self._resident: dict[int, int] = {}  # cid -> slot
+        self._resident: dict[int, int] = {}  # cid -> primary slot
+        self._replica_slots: dict[int, list[int]] = {}  # cid -> all slots
         self._transit: dict[int, int] = {}  # cid -> substages remaining
+        # per-slot transit for *extra* replica copies: the primary stays
+        # visible while a new replica pays the same staging latency
+        self._slot_transit: dict[int, int] = {}
         self._refused: set[int] = set()  # loader-refused (e.g. oversized)
         self._free_slots = list(range(self.capacity))
         self._substage = 0
@@ -171,6 +193,33 @@ class HotClusterCache:
     def resident_ids(self) -> list[int]:
         return [c for c in self._resident if c not in self._transit]
 
+    def replica_slots(self) -> dict[int, list[int]]:
+        """cid -> *visible* staged slots (primary first).  Clusters whose
+        primary load is still in transit, and individual replica copies in
+        slot transit, are excluded — visibility semantics live here, not in
+        the callers."""
+        return {
+            cid: [s for s in slots if s not in self._slot_transit]
+            for cid, slots in self._replica_slots.items()
+            if cid not in self._transit
+        }
+
+    def replica_owners(self, cid: int) -> list[int]:
+        """Distinct owner workers holding a *visible* copy of ``cid``."""
+        if cid in self._transit:
+            return []
+        slots = self._replica_slots.get(cid)
+        if not slots:
+            return []
+        return sorted({s % self.num_owners for s in slots
+                       if s not in self._slot_transit})
+
+    @property
+    def replicated_ids(self) -> list[int]:
+        """Visible clusters staged on two or more distinct owners."""
+        return [c for c in self._replica_slots
+                if len(self.replica_owners(c)) > 1]
+
     # ------------------------------------------------------------------- tick
     def end_substage(self) -> None:
         """Advance one sub-stage: progress transits, maybe refresh hot set."""
@@ -182,40 +231,105 @@ class HotClusterCache:
                 done.append(cid)
         for cid in done:
             del self._transit[cid]
+        for slot in list(self._slot_transit):
+            self._slot_transit[slot] -= 1
+            if self._slot_transit[slot] <= 0:
+                del self._slot_transit[slot]
         self.tracker.tick()
         if self.capacity and self._substage % self.update_interval == 0:
             self._refresh()
+
+    def _want_copies(self, ranked: list[int]) -> dict[int, int]:
+        """Desired copies per cluster under the capacity budget: with
+        replication the hottest ``capacity // (2*replication)`` clusters get
+        ``replication`` copies (on distinct owners), the rest one.  Copies
+        beyond the number of distinct owners add no routable holder, so the
+        factor is clamped to ``num_owners``."""
+        r = max(1, min(self.replication, self.num_owners))
+        if r == 1:
+            return {c: 1 for c in ranked[: self.capacity]}
+        n_hot = max(1, self.capacity // (2 * r))
+        want: dict[int, int] = {}
+        budget = self.capacity
+        for i, c in enumerate(ranked):
+            n = min(r if i < n_hot else 1, budget)
+            if n <= 0:
+                break
+            want[c] = n
+            budget -= n
+        return want
+
+    def _take_slot(self, used_owners: set[int],
+                   require_distinct: bool = False) -> Optional[int]:
+        """Pop a free slot on an owner not yet holding a copy of the
+        cluster (so replicas spread across workers).  With
+        ``require_distinct`` (extra replica copies), returns None instead
+        of falling back to a same-owner slot — such a copy would pin
+        capacity without adding a routable holder."""
+        if self.num_owners > 1 and used_owners:
+            for i in range(len(self._free_slots) - 1, -1, -1):
+                if self._free_slots[i] % self.num_owners not in used_owners:
+                    return self._free_slots.pop(i)
+            if require_distinct:
+                return None
+        return self._free_slots.pop()
 
     def _refresh(self) -> None:
         self.stats.updates += 1
         # refused clusters (e.g. oversized for the device tile) are excluded
         # from candidacy so they are rejected at most once and the slot they
-        # would pin goes to the next-hottest loadable cluster instead
+        # would pin goes to the next-hottest loadable cluster instead;
+        # ranking comes from the pool-shared tracker when one is attached
+        src = self.shared_tracker if self.shared_tracker is not None else self.tracker
         ranked = [int(c) for c in
-                  self.tracker.top(self.capacity + len(self._refused))
-                  if int(c) not in self._refused][: self.capacity]
-        want = set(ranked)
+                  src.top(self.capacity + len(self._refused))
+                  if int(c) not in self._refused]
+        want = self._want_copies(ranked)
         have = set(self._resident)
-        evict = list(have - want)
-        load = [c for c in ranked if c not in have]
+        evict = list(have - set(want))
         # evict first to free slots; eviction is instantaneous (drop only)
         for cid in evict:
-            self._free_slots.append(self._resident.pop(cid))
-            self._transit.pop(cid, None)
-        for cid in load:
-            if not self._free_slots:
-                break
-            slot = self._free_slots.pop()
-            if self.loader is not None and self.loader(cid, slot) is False:
-                # loader refused: release the slot, remember the refusal,
-                # keep the cluster on the host path permanently
+            for slot in self._replica_slots.pop(cid, [self._resident[cid]]):
                 self._free_slots.append(slot)
-                self._refused.add(cid)
-                self.stats.oversized_rejects += 1
-                continue
-            self._resident[cid] = slot
-            self._transit[cid] = self.transit_substages
-            self.stats.swaps += 1
+                self._slot_transit.pop(slot, None)
+            self._resident.pop(cid)
+            self._transit.pop(cid, None)
+        # trim excess copies of clusters that cooled below the hot cut
+        for cid, slots in self._replica_slots.items():
+            keep = want.get(cid, 1)
+            while len(slots) > keep:
+                slot = slots.pop()
+                self._free_slots.append(slot)
+                self._slot_transit.pop(slot, None)
+        # stage missing copies, hottest first (dict preserves ranked order)
+        for cid, copies in want.items():
+            slots = self._replica_slots.get(cid, [])
+            fresh = cid not in have
+            while len(slots) < copies:
+                if not self._free_slots:
+                    return
+                owners = {s % self.num_owners for s in slots}
+                slot = self._take_slot(owners, require_distinct=bool(slots))
+                if slot is None:
+                    break  # no distinct-owner slot free: skip the copy
+                if self.loader is not None and self.loader(cid, slot) is False:
+                    # loader refused: release the slot, remember the refusal,
+                    # keep the cluster on the host path permanently
+                    self._free_slots.append(slot)
+                    self._refused.add(cid)
+                    self.stats.oversized_rejects += 1
+                    break
+                slots.append(slot)
+                self._replica_slots[cid] = slots
+                if fresh and len(slots) == 1:
+                    self._resident[cid] = slot
+                    self._transit[cid] = self.transit_substages
+                else:
+                    # extra replica: the primary stays visible, the new copy
+                    # pays the same staging latency before it is routable
+                    self._slot_transit[slot] = self.transit_substages
+                    self.stats.replica_loads += 1
+                self.stats.swaps += 1
 
 
 # ---------------------------------------------------------------------------

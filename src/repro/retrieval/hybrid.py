@@ -57,6 +57,9 @@ class HybridRetrievalEngine:
         transit_substages: int = 2,
         kernel_impl: str = "auto",
         topk_default: int = 10,
+        replication: int = 1,
+        num_owners: int = 1,
+        shared_tracker=None,
     ):
         import jax.numpy as jnp
 
@@ -80,6 +83,9 @@ class HybridRetrievalEngine:
             update_interval=update_interval,
             transit_substages=transit_substages,
             loader=self._load_cluster if cache_capacity else None,
+            replication=replication,
+            num_owners=num_owners,
+            shared_tracker=shared_tracker,
         )
         self._device_slab = None  # lazily mirrored jnp copy
         self._dirty_slots: set[int] = set()  # staged but not yet delta-uploaded
@@ -256,6 +262,10 @@ class HybridRetrievalEngine:
         """Residency snapshot for dispatch-time charging (bool per cluster)."""
         return self.cache.resident_mask()
 
+    def replica_owners(self, cid: int) -> list[int]:
+        """Workers holding a staged replica of ``cid`` (crossreq routing)."""
+        return self.cache.replica_owners(cid)
+
     def stats(self) -> dict:
         return {
             "hit_rate": self.cache.stats.hit_rate,
@@ -264,6 +274,8 @@ class HybridRetrievalEngine:
             "swaps": self.cache.stats.swaps,
             "oversized_rejects": self.cache.stats.oversized_rejects,
             "stale_fallbacks": self.cache.stats.stale_fallbacks,
+            "replica_loads": self.cache.stats.replica_loads,
+            "replicated_clusters": len(self.cache.replicated_ids),
             "uploads": dict(self.upload_stats),
             "skew": self.cache.tracker.skewness_report(),
         }

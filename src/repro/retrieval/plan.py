@@ -135,6 +135,10 @@ class RetrievalPlan:
     item_group: np.ndarray  # (n_items,) i64 — owning group per item
     group_start: np.ndarray  # (n_groups + 1,) i64 — items of g: [s[g], s[g+1])
     group_k: np.ndarray  # (n_groups,) i64 — requested k per group
+    # (n_groups,) i64 — logical searches served per group: a crossreq-fused
+    # group executes once but answers `fanout` subscriber requests; backends
+    # charge the group once and account the avoided duplicate work
+    group_fanout: np.ndarray
     group_meta: list  # opaque per-group tags (request/node/spec binding)
     seed_dists: np.ndarray  # (n_groups, k) f32 — running top-k at assembly
     seed_ids: np.ndarray  # (n_groups, k) i64
@@ -255,6 +259,8 @@ class PlanBuilder:
         self._seeds: list[Optional[TopK]] = []
         self._last_kth: list[float] = []
         self._no_improve: list[int] = []
+        self._fanout: list[int] = []
+        self._out_k: list[int] = []
 
     def __len__(self) -> int:
         return len(self._queries)
@@ -273,8 +279,17 @@ class PlanBuilder:
         seed: Optional[TopK] = None,
         last_kth: float = np.inf,
         no_improve: int = 0,
+        fanout: int = 1,
+        out_k: Optional[int] = None,
     ) -> int:
-        """Add one group: ``query`` probing ``clusters`` with running ``seed``."""
+        """Add one group: ``query`` probing ``clusters`` with running ``seed``.
+
+        ``out_k`` widens the *scoreboard* (``plan.k``) beyond the group's
+        requested ``k`` without touching ``group_k`` — the k-th-distance
+        streaks and the returned ``group_topk(g, k)`` stay identical, but
+        ``finalize`` rows carry ``out_k`` candidates (used by the crossreq
+        global cache to publish top-k' entries at no extra scan cost).
+        """
         gid = len(self._queries)
         self._queries.append(np.asarray(query, np.float32))
         self._clusters.append(np.asarray(clusters, np.int64))
@@ -283,6 +298,8 @@ class PlanBuilder:
         self._seeds.append(seed)
         self._last_kth.append(float(last_kth))
         self._no_improve.append(int(no_improve))
+        self._fanout.append(max(1, int(fanout)))
+        self._out_k.append(int(out_k) if out_k is not None else int(k))
         return gid
 
     def build(self) -> RetrievalPlan:
@@ -301,7 +318,7 @@ class PlanBuilder:
         queries = group_q[item_group]
         q_norms = (group_q**2).sum(-1)[item_group]
         group_k = np.array(self._k, np.int64)
-        k = int(group_k.max())
+        k = int(max(group_k.max(), max(self._out_k)))
         seed_d = np.full((n_groups, k), np.inf, np.float32)
         seed_i = np.full((n_groups, k), -1, np.int64)
         for g, tk in enumerate(self._seeds):
@@ -325,6 +342,7 @@ class PlanBuilder:
             item_group=item_group,
             group_start=group_start,
             group_k=group_k,
+            group_fanout=np.array(self._fanout, np.int64),
             group_meta=list(self._meta),
             seed_dists=seed_d,
             seed_ids=seed_i,

@@ -60,6 +60,76 @@ def make_corpus(cfg: CorpusConfig) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
 
 
 @dataclasses.dataclass
+class DuplicateTrafficEmbedder:
+    """Wrapper modelling cross-user duplicate/near-duplicate query traffic.
+
+    A ``dup_ratio`` fraction of requests re-issue a *canonical* query drawn
+    Zipf-style from a small trending pool (the inter-request skewness of
+    paper §4.4 applied to the query stream itself — at millions of users,
+    lookalike queries are the common case).  ``near_jitter > 0`` perturbs
+    duplicates into near-duplicates with a controlled cosine distance, which
+    is what the crossreq dedup threshold and the global cache's ball-bound
+    answers are calibrated against.
+
+    ``canonical_id`` is exposed so workloads can keep duplicate requests on
+    the same workflow (same query -> same pipeline) and benchmarks can
+    assert fused answers against independently executed searches.
+    """
+
+    base: "Embedder"
+    dup_ratio: float = 0.3
+    pool_size: int = 8
+    near_jitter: float = 0.0
+    zipf_alpha: float = 1.1
+    seed: int = 77
+
+    # canonical queries live in a reserved request-id space far above any
+    # real request id, so they never collide with organic traffic
+    _POOL_BASE = 10_000_000
+
+    def __post_init__(self):
+        self.dim = self.base.dim
+        ranks = np.arange(1, self.pool_size + 1, dtype=np.float64)
+        pops = ranks ** (-self.zipf_alpha)
+        self._pops = pops / pops.sum()
+
+    def canonical_id(self, request_id: int) -> int:
+        """The id whose query stream this request re-issues (itself when the
+        request is organic, a pool id when it is duplicate traffic)."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, request_id]))
+        if rng.random() < self.dup_ratio:
+            return self._POOL_BASE + int(
+                rng.choice(self.pool_size, p=self._pops))
+        return request_id
+
+    def is_duplicate(self, request_id: int) -> bool:
+        return self.canonical_id(request_id) != request_id
+
+    def _jitter(self, vec: np.ndarray, request_id: int, tag: int) -> np.ndarray:
+        if self.near_jitter <= 0.0:
+            return vec
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, request_id, tag]))
+        noise = rng.standard_normal(self.dim) / np.sqrt(self.dim)
+        return _unit((vec + self.near_jitter * noise)[None, :].astype(np.float32))[0]
+
+    def embed_query(self, request_id: int, round_idx: int) -> np.ndarray:
+        cid = self.canonical_id(request_id)
+        v = self.base.embed_query(cid, round_idx)
+        if cid == request_id:
+            return v
+        return self._jitter(v, request_id, 300 + round_idx)
+
+    def embed_partial(self, request_id: int, round_idx: int, ratio: float) -> np.ndarray:
+        cid = self.canonical_id(request_id)
+        v = self.base.embed_partial(cid, round_idx, ratio)
+        if cid == request_id:
+            return v
+        return self._jitter(v, request_id, 400 + round_idx)
+
+
+@dataclasses.dataclass
 class SyntheticEmbedder:
     """Per-request query/generation embedding process (see module docstring).
 

@@ -9,6 +9,16 @@
 The server owns admission (arrival times / Poisson open-loop), request-state
 journaling (fault tolerance: completed requests are replayable), and the
 wavefront scheduler + backend pair.
+
+Cross-request coordination (``repro.crossreq``) is enabled through the same
+keyword overrides as every other scheduler knob::
+
+    s = Server(index, embedder, mode="hedra",
+               global_cache_size=256,   # shared semantic cache entries
+               dedup_threshold=0.95,    # in-flight query fusion (cosine)
+               replication_factor=2)    # hot-cluster replicas across workers
+    ...
+    s.run(); s.crossreq_report()
 """
 from __future__ import annotations
 
@@ -67,6 +77,12 @@ class Server:
         if self.journal_path:
             self.write_journal(self.journal_path)
         return m
+
+    def crossreq_report(self) -> dict:
+        """Cross-request coordination counters (empty when disabled)."""
+        if self.sched.crossreq is None:
+            return {}
+        return self.sched.crossreq.report()
 
     # ------------------------------------------------------- fault tolerance
     def write_journal(self, path: str) -> None:

@@ -15,7 +15,16 @@ This module keeps both concerns out of the scheduler loop:
 * ``RetrievalDispatcher`` — per-worker EMA cluster-affinity history plus
   accumulated busy time; ``pick_worker`` implements the policies
   ``affinity`` (history coverage, least-loaded fallback), ``least_loaded``
-  and ``round_robin``.
+  and ``round_robin``.  The dispatcher is the single policy-side source of
+  worker load: ``note_busy`` accumulates dispatched (in-flight) time and
+  ``note_complete`` the completed share — ``Metrics.ret_busy_per_worker``
+  mirrors the latter instead of double-booking its own accumulator.
+* Cross-request extensions (``repro.crossreq``): an attached shared
+  ``PopularityTracker`` receives every dispatched cluster (the global probe
+  histogram superseding the per-worker EMA as the skew source of truth),
+  and an attached ``ReplicaMap`` routes sub-stages touching replicated hot
+  clusters to the least-loaded replica holder instead of serialising them
+  on a single affinity owner.
 * ``order_by_slack`` — sorts a wavefront by SLO slack
   ``deadline - now - estimated_remaining`` so the tightest requests are
   assembled (and therefore dispatched) first.
@@ -34,9 +43,12 @@ DISPATCH_POLICIES = ("affinity", "least_loaded", "round_robin")
 class WorkerState:
     wid: int
     freq: np.ndarray  # per-cluster EMA of recently dispatched clusters
-    # policy-side load proxy (post-mitigation durations via note_busy); the
-    # authoritative per-worker occupancy report is Metrics.ret_busy_per_worker
+    # single policy-side load source: busy_us accumulates at dispatch time
+    # (includes in-flight work, what load-aware placement needs) and
+    # completed_us at completion time (what Metrics.ret_busy_per_worker
+    # mirrors for occupancy reporting)
     busy_us: float = 0.0
+    completed_us: float = 0.0
     dispatches: int = 0
 
 
@@ -44,13 +56,20 @@ class RetrievalDispatcher:
     """Assigns retrieval sub-stages (cluster lists) to a pool of workers."""
 
     def __init__(self, num_workers: int, n_clusters: int, *,
-                 policy: str = "affinity", decay: float = 0.95):
+                 policy: str = "affinity", decay: float = 0.95,
+                 tracker=None, replica_map=None):
         if policy not in DISPATCH_POLICIES:
             raise ValueError(
                 f"unknown dispatch policy {policy!r}; choose from {DISPATCH_POLICIES}")
         self.num_workers = max(1, int(num_workers))
         self.policy = policy
         self.decay = decay
+        # optional crossreq state: the shared cluster-popularity histogram
+        # (fed on every dispatch) and the hot-cluster replica map consulted
+        # ahead of the configured policy
+        self.tracker = tracker
+        self.replica_map = replica_map
+        self.replica_routes = 0
         self.workers = [
             WorkerState(w, np.zeros(n_clusters, np.float64))
             for w in range(self.num_workers)
@@ -85,8 +104,27 @@ class RetrievalDispatcher:
             return w
         if self.policy == "least_loaded":
             return self.least_loaded(candidates, extra_load)
-        # affinity: worker whose recent history best covers these clusters;
-        # cold clusters (no history anywhere) fall back to least-loaded
+        aff = self._affinity_pick(clusters, candidates, extra_load)
+        if self.replica_map is not None:
+            # replica-aware routing (affinity only — the other policies do
+            # not serialise hot clusters): a sub-stage touching replicated
+            # hot clusters may land on any idle replica holder, least-loaded
+            # among them, instead of the single affinity owner.  Counted
+            # only when the choice actually deviates from affinity's.
+            holders = self.replica_map.owners_for(clusters)
+            cands = [w for w in candidates if w in holders]
+            if cands:
+                pick = self.least_loaded(cands, extra_load)
+                if pick != aff:
+                    self.replica_routes += 1
+                return pick
+        return aff
+
+    def _affinity_pick(self, clusters: Iterable[int],
+                       candidates: Sequence[int],
+                       extra_load: Optional[dict]) -> int:
+        """Worker whose recent history best covers these clusters; cold
+        clusters (no history anywhere) fall back to least-loaded."""
         extra = extra_load or {}
         cl = np.asarray(list(clusters), np.int64)
         scores = {w: float(self.workers[w].freq[cl].sum()) for w in candidates}
@@ -104,18 +142,27 @@ class RetrievalDispatcher:
         cl = np.asarray(list(clusters), np.int64)
         if cl.size:
             np.add.at(st.freq, cl, 1.0)
+            if self.tracker is not None:
+                self.tracker.record(cl)
         st.dispatches += 1
 
     def note_busy(self, wid: int, dur_us: float) -> None:
         self.workers[wid].busy_us += dur_us
+
+    def note_complete(self, wid: int, dur_us: float) -> None:
+        """A dispatched job finished; its duration moves from in-flight to
+        completed occupancy (mirrored into Metrics by the scheduler)."""
+        self.workers[wid].completed_us += dur_us
 
     # ----------------------------------------------------------------- stats
     def report(self) -> dict:
         busy = np.asarray([w.busy_us for w in self.workers])
         return {
             "busy_us": busy.tolist(),
+            "completed_us": [w.completed_us for w in self.workers],
             "dispatches": [w.dispatches for w in self.workers],
             "busy_skew": float(busy.max() / busy.mean()) if busy.mean() > 0 else 1.0,
+            "replica_routes": self.replica_routes,
         }
 
 

@@ -1,0 +1,411 @@
+"""Cross-request coordination layer: global semantic cache, in-flight
+dedup/fusion, popularity-aware replication, and the scheduler integration
+(disabled == bit-identical, enabled == faster + correct)."""
+import numpy as np
+import pytest
+
+from repro import workflows
+from repro.core.backends import SimBackend
+from repro.core.wavefront import SchedulerConfig
+from repro.crossreq import (
+    CrossRequestCoordinator,
+    FusionPass,
+    GlobalCache,
+    PopularityTracker,
+    ReplicaMap,
+)
+from repro.retrieval import DuplicateTrafficEmbedder, HybridRetrievalEngine
+from repro.retrieval.hotcache import HotClusterCache
+from repro.retrieval.ivf import ClusterCostModel, TopK
+from repro.serving import dispatch
+from repro.server import Server
+from repro.serving.workload import WorkloadProfile, poisson_arrivals
+
+RET_BOUND = ClusterCostModel(fixed_us=150.0, per_vector_us=20.0, per_query_us=2.0)
+NAMES = ["one-shot", "hyde", "irg", "multistep", "recomp"]
+
+CROSSREQ = dict(global_cache_size=128, dedup_threshold=0.95,
+                replication_factor=2)
+
+
+def _serve(index, emb, *, dup=0.45, crossreq=True, nw=2, n=40, rate=70.0,
+           hybrid=None, config=None, near_jitter=0.0, **cfg_kw):
+    demb = DuplicateTrafficEmbedder(emb, dup_ratio=dup, pool_size=4,
+                                    near_jitter=near_jitter)
+    wl = WorkloadProfile(gen_tokens_mean=14.0, gen_tokens_sigma=0.25,
+                         prompt_tokens_mean=48.0)
+    be = SimBackend(index, demb, hybrid=hybrid, cost_model=RET_BOUND,
+                    gen_step_base_us=600.0, gen_step_per_seq_us=20.0)
+    kw = dict(CROSSREQ) if crossreq else {}
+    kw.update(cfg_kw)
+    if config is not None:
+        s = Server(index, demb, backend=be, config=config, workload=wl)
+    else:
+        s = Server(index, demb, mode="hedra", backend=be, workload=wl,
+                   nprobe=16, topk=5, num_ret_workers=nw, **kw)
+    for i, t in enumerate(poisson_arrivals(rate, n, seed=5)):
+        name = NAMES[demb.canonical_id(i) % len(NAMES)]
+        s.add_request(f"q{i}", workflows.build(name), arrival_us=t)
+    return s, demb, s.run()
+
+
+# ------------------------------------------------------------- GlobalCache
+
+
+def _topk(dists, ids, k=None):
+    d = np.asarray(dists, np.float32)
+    i = np.asarray(ids, np.int64)
+    return TopK(k or len(d), d, i)
+
+
+def test_global_cache_exact_hit_and_miss(small_index):
+    gc = GlobalCache(8)
+    q = np.random.default_rng(0).standard_normal(small_index.dim).astype(np.float32)
+    assert gc.answer(q, 3, 8) is None
+    gc.insert(q, _topk([0.1, 0.2, 0.3, 0.4], small_index.ids[:4]),
+              small_index, [0, 1, 2], nprobe=8)
+    hit = gc.answer(q, 3, 8)
+    assert hit is not None
+    d, i = hit
+    np.testing.assert_allclose(d, [0.1, 0.2, 0.3])
+    # different nprobe -> different key -> no exact fast path from the hash
+    assert gc.stats.exact_hits == 1
+    # far-away query: no answer, no seed
+    q2 = -q
+    assert gc.answer(q2, 3, 8) is None
+    assert gc.seed(q2) is None
+
+
+def test_global_cache_seed_returns_localcache_duck(small_index):
+    gc = GlobalCache(8)
+    q = np.random.default_rng(1).standard_normal(small_index.dim).astype(np.float32)
+    gc.insert(q, _topk([0.1, 0.2], small_index.ids[:2]), small_index,
+              [3, 4, 5], nprobe=8)
+    near = (q + 0.01).astype(np.float32)
+    ent = gc.seed(near)
+    assert ent is not None and not ent.empty
+    assert ent.probed_clusters == {3, 4, 5}
+    assert len(ent.home_clusters) >= 1
+    from repro.core.similarity import reorder_clusters
+
+    plan = reorder_clusters([5, 4, 9], ent)
+    assert plan.order[-1] == 9  # unseen cluster ordered last
+
+
+def test_global_cache_eviction_is_popularity_weighted(small_index):
+    gc = GlobalCache(2)
+    rng = np.random.default_rng(2)
+    qs = rng.standard_normal((3, small_index.dim)).astype(np.float32) * 10
+    tk = _topk([0.1], small_index.ids[:1])
+    gc.insert(qs[0], tk, small_index, [0], nprobe=8)
+    gc.insert(qs[1], tk, small_index, [0], nprobe=8)
+    for _ in range(5):  # make entry 0 popular
+        assert gc.answer(qs[0], 1, 8) is not None
+    gc.insert(qs[2], tk, small_index, [0], nprobe=8)  # evicts the cold one
+    assert gc.answer(qs[0], 1, 8) is not None  # popular entry survived
+    assert gc.stats.evictions == 1
+    assert len(gc) == 2
+
+
+def test_global_cache_near_answer_via_ball_bound(small_index):
+    """With a wide (k'-style) entry, a near-but-not-identical query is
+    answered through the answer_from_cache triangle/ball bound."""
+    gc = GlobalCache(8)
+    q = np.zeros(small_index.dim, np.float32)
+    q[0] = 1.0
+    # 20-wide entry: k tight results, then a big gap before the tail
+    dists = np.concatenate([np.linspace(0.01, 0.05, 5),
+                            np.linspace(4.0, 5.0, 15)]).astype(np.float32)
+    gc.insert(q, _topk(dists, small_index.ids[:20]), small_index,
+              [0, 1], nprobe=8)
+    near = q.copy()
+    near[1] = 0.01  # inside answer_delta_frac * ||q||, clearly not exact
+    hit = gc.answer(near, 3, 8)
+    assert hit is not None
+    assert gc.stats.near_answers == 1
+    np.testing.assert_array_equal(hit[1], small_index.ids[:3])
+
+
+def test_stage_publishes_wide_entries(small_index, embedder):
+    """Stages publish top-k' (wider than the request k) entries, so the
+    ball-bound near-answer path has margin to work with."""
+    s, _, m = _serve(small_index, embedder, dup=0.0, n=10, rate=10.0,
+                     dedup_threshold=0.0, replication_factor=1)
+    gc = s.sched.crossreq.global_cache
+    assert len(gc) > 0
+    widths = [int((e.ids >= 0).sum()) for e in gc._entries if e is not None]
+    assert max(widths) > 8, f"entries not widened: {widths}"
+
+
+def test_global_cache_same_key_refreshes_in_place(small_index):
+    gc = GlobalCache(4)
+    q = np.random.default_rng(3).standard_normal(small_index.dim).astype(np.float32)
+    tk = _topk([0.5], small_index.ids[:1])
+    gc.insert(q, tk, small_index, [0], nprobe=8)
+    gc.insert(q, tk, small_index, [1], nprobe=8)
+    assert len(gc) == 1
+    assert gc.stats.refreshes == 1
+
+
+# -------------------------------------------------------------- FusionPass
+
+
+class _FakeReq:
+    def __init__(self, rid, qv, k=5, nprobe=8):
+        class _R:
+            pass
+
+        self.request_id = rid
+        self.ret = _R()
+        self.ret.query_vec = np.asarray(qv, np.float32)
+        self.ret.k = k
+        self.ret.nprobe = nprobe
+
+
+def test_fusion_exact_and_near_subscribe():
+    q = np.array([1.0, 0.0, 0.0], np.float32)
+    lead, dup = _FakeReq(0, q), _FakeReq(1, q.copy())
+    near = _FakeReq(2, np.array([0.999, 0.04, 0.0], np.float32))
+    far = _FakeReq(3, np.array([0.0, 1.0, 0.0], np.float32))
+    fp = FusionPass(0.95)
+    assert fp.try_subscribe(lead, allow_near=True) is None
+    fp.register_leader(lead)
+    assert fp.try_subscribe(dup, allow_near=True) == "exact"
+    assert fp.try_subscribe(near, allow_near=True) == "near"
+    assert fp.try_subscribe(far, allow_near=True) is None
+    assert fp.fanout(0) == 3
+    subs = fp.complete_leader(0)
+    assert [(s.request_id, kind) for s, kind in subs] == [(1, "exact"), (2, "near")]
+    assert fp.complete_leader(0) == []  # group is gone
+    assert fp.n_inflight_leaders == 0
+
+
+def test_fusion_threshold_one_is_exact_only_and_k_bucketed():
+    q = np.array([1.0, 0.0], np.float32)
+    fp = FusionPass(1.0)
+    fp.register_leader(_FakeReq(0, q))
+    assert fp.try_subscribe(_FakeReq(1, q * 0.999), allow_near=True) is None
+    assert fp.try_subscribe(_FakeReq(2, q.copy()), allow_near=True) == "exact"
+    # same vector, different k -> different bucket, no fusion
+    assert fp.try_subscribe(_FakeReq(3, q.copy(), k=9), allow_near=True) is None
+    with pytest.raises(ValueError):
+        FusionPass(0.0)
+
+
+# -------------------------------------------- PopularityTracker / ReplicaMap
+
+
+def test_replica_map_from_tracker_spreads_owners():
+    tr = PopularityTracker(16)
+    tr.record([3] * 10 + [7] * 6 + [1] * 3)
+    rm = ReplicaMap(4, 2, hot_fraction=0.2)
+    rm.refresh_from_tracker(tr)
+    o3, o7 = rm.owners(3), rm.owners(7)
+    assert len(o3) == len(o7) == 2
+    assert o3 != o7  # rank-spread: adjacent hot clusters on disjoint primaries
+    assert rm.owners_for([3, 7]) == set(o3) | set(o7)
+    assert rm.owners(15) is None
+    # factor 1 -> no replication at all
+    rm1 = ReplicaMap(4, 1)
+    rm1.refresh_from_tracker(tr)
+    assert rm1.n_replicated == 0
+
+
+def test_dispatcher_routes_to_replica_holders():
+    tr = PopularityTracker(8)
+    rm = ReplicaMap(4, 2, hot_fraction=0.25)
+    d = dispatch.RetrievalDispatcher(4, 8, policy="affinity",
+                                     tracker=tr, replica_map=rm)
+    d.note_dispatch(0, [2, 2, 2, 2])  # worker 0 hoards cluster 2
+    rm.refresh_from_tracker(tr)
+    holders = rm.owners(2)
+    assert holders is not None and len(holders) == 2
+    d.note_busy(holders[0], 1000.0)
+    # replica routing picks the least-loaded holder, not the affinity owner
+    assert d.pick_worker([2], list(range(4))) == holders[1]
+    assert d.replica_routes == 1
+    # unmapped cluster falls through to the affinity policy
+    assert d.pick_worker([5], [1, 2]) in (1, 2)
+
+
+def test_hotcache_replication_stages_copies_on_distinct_owners():
+    loads = []
+    cache = HotClusterCache(16, capacity=8, update_interval=1,
+                            transit_substages=0, replication=2, num_owners=4,
+                            loader=lambda cid, slot: loads.append((cid, slot)) or True)
+    cache.tracker.record([3] * 20 + [5] * 10 + [7] * 5 + [1] * 2)
+    cache.end_substage()  # triggers refresh
+    cache.end_substage()  # clears the (zero-length) transits
+    slots = cache._replica_slots
+    hot = [c for c, s in slots.items() if len(s) > 1]
+    assert hot, "no cluster got a second replica"
+    for cid in hot:
+        owners = cache.replica_owners(cid)
+        assert len(owners) == len(slots[cid])  # replicas on distinct owners
+    assert cache.stats.replica_loads >= 1
+    assert cache.stats.swaps == len(loads)
+
+
+def test_replica_copies_pay_transit_latency():
+    """A replica staged for an already-visible cluster is not routable until
+    transit_substages have passed (the primary stays visible throughout)."""
+    cache = HotClusterCache(16, capacity=8, update_interval=1,
+                            transit_substages=2, replication=2, num_owners=4)
+    cache.tracker.record([3] * 20 + [5] * 10)
+    cache.end_substage()  # refresh: primary + replica staged, all in transit
+    hot = [c for c, s in cache._replica_slots.items() if len(s) > 1]
+    assert hot
+    cid = hot[0]
+    # the cluster's primary load is itself still in transit: no holders yet
+    assert cache.replica_owners(cid) == []
+    assert cid not in cache.replicated_ids
+    for _ in range(3):
+        cache.end_substage()
+    assert len(cache.replica_owners(cid)) == 2  # both copies now visible
+    assert cid in cache.replicated_ids
+
+
+def test_hotcache_shared_tracker_supersedes_local_ranking():
+    shared = PopularityTracker(8)
+    shared.record([6] * 50)
+    cache = HotClusterCache(8, capacity=2, update_interval=1,
+                            transit_substages=0, shared_tracker=shared)
+    cache.tracker.record([1] * 50)  # local access EMA says 1 is hot
+    cache.end_substage()
+    assert 6 in cache._resident  # but the shared histogram won
+    assert 1 not in cache._resident
+
+
+# -------------------------------------------------------- scheduler: gating
+
+
+def test_crossreq_disabled_by_default_and_bit_stable(small_index, embedder):
+    s, _, m = _serve(small_index, embedder, crossreq=False, n=20)
+    assert s.sched.crossreq is None
+    assert s.sched.dispatcher.tracker is None
+    assert m.global_cache_answers == m.dedup_fanout == m.replica_routes == 0
+    assert s.crossreq_report() == {}
+    # determinism: the identical run reproduces latencies exactly
+    s2, _, m2 = _serve(small_index, embedder, crossreq=False, n=20)
+    assert m.latencies_us == m2.latencies_us
+
+
+def test_crossreq_zero_knobs_equal_default(small_index, embedder):
+    _, _, m0 = _serve(small_index, embedder, crossreq=False, n=20)
+    _, _, m1 = _serve(small_index, embedder, crossreq=True, n=20,
+                      global_cache_size=0, dedup_threshold=0.0,
+                      replication_factor=1)
+    assert m0.latencies_us == m1.latencies_us
+
+
+# ----------------------------------------------------- scheduler: enabled
+
+
+def test_crossreq_serves_duplicates_faster(small_index, embedder):
+    _, _, m0 = _serve(small_index, embedder, crossreq=False)
+    _, _, m1 = _serve(small_index, embedder, crossreq=True)
+    assert m1.finished == m0.finished == 40
+    assert m1.dedup_fanout > 0
+    p0 = m0.summary()["p50_latency_ms"]
+    p1 = m1.summary()["p50_latency_ms"]
+    assert p0 / p1 >= 1.2, f"crossreq speedup only {p0 / p1:.2f}x"
+
+
+def test_exact_fusion_identical_to_independent_search(small_index, embedder):
+    """Acceptance: fused-group answers == independently executed searches
+    for exact duplicates (lossless settings isolate the fusion path)."""
+    cfg = SchedulerConfig.preset(
+        "hedra", nprobe=12, topk=5, num_ret_workers=2,
+        enable_cache_answer=False, early_term_mode="lossless",
+        dedup_threshold=1.0)
+    demb = DuplicateTrafficEmbedder(embedder, dup_ratio=0.7, pool_size=2)
+    be = SimBackend(small_index, demb, cost_model=RET_BOUND)
+    s = Server(small_index, demb, backend=be, config=cfg)
+    for i, t in enumerate(poisson_arrivals(300.0, 16, seed=7)):
+        s.add_request(f"q{i}", workflows.build("one-shot"), arrival_us=t)
+    m = s.run()
+    assert m.finished == 16
+    assert m.dedup_fanout > 0
+    for r in s.sched.done:
+        qv = demb.embed_query(r.request_id, 0)
+        _, ref = small_index.search(qv[None], nprobe=12, k=5)
+        got = r.state["docs"]
+        assert got == [int(x) for x in ref[0][: len(got)]]
+
+
+def test_near_fusion_tolerance_bounded(small_index, embedder):
+    """Near-duplicate fan-out answers are within the triangle bound of the
+    subscriber's own reference search."""
+    s, demb, m = _serve(small_index, embedder, dup=0.6, near_jitter=0.05,
+                        dedup_threshold=0.9, n=32, rate=150.0)
+    assert m.finished == 32
+    assert m.dedup_near > 0
+    checked = 0
+    for r in s.sched.done:
+        if not demb.is_duplicate(r.request_id):
+            continue
+        out = r.state.get("docs")
+        if not out:
+            continue
+        qv = demb.embed_query(r.request_id, 0)
+        dref, _ = small_index.search(qv[None], nprobe=16, k=5)
+        ref_kth = float(np.sqrt(max(dref[0][min(len(out), 5) - 1], 0.0)))
+        # any fused/cached answer comes from a query within the dedup ball;
+        # returned docs' true distances obey d <= d_ref_k + 2 * delta
+        canon = demb.base.embed_query(demb.canonical_id(r.request_id), 0)
+        delta = float(np.linalg.norm(qv - canon)) + 0.35  # ball + answer slack
+        rows = np.nonzero(np.isin(small_index.ids, out))[0]
+        true_d = np.linalg.norm(small_index.flat[rows] - qv[None, :], axis=1)
+        assert float(true_d.max()) <= ref_kth + 2.0 * delta + 1e-3
+        checked += 1
+    assert checked > 0
+
+
+def test_global_cache_answers_repeat_queries(small_index, embedder):
+    _, _, m = _serve(small_index, embedder, dup=0.6, rate=25.0, n=40,
+                     dedup_threshold=0.0)  # isolate the global cache
+    assert m.global_cache_answers > 0
+    assert m.dedup_fanout == 0
+    summ = m.summary()
+    assert summ["global_cache_answers"] == m.global_cache_answers
+
+
+def test_replication_with_hybrid_cache(small_index, embedder):
+    hyb = HybridRetrievalEngine(small_index, cache_capacity=12,
+                                update_interval=10, transit_substages=1,
+                                kernel_impl="ref")
+    s, _, m = _serve(small_index, embedder, nw=4, hybrid=hyb, n=40)
+    assert m.finished == 40
+    assert hyb.cache.replication == 2  # coordinator attached replication
+    assert hyb.cache.shared_tracker is s.sched.crossreq.tracker
+    st = hyb.stats()
+    assert st["replica_loads"] > 0
+    assert m.cache_stats["replica_loads"] == st["replica_loads"]
+    summ = m.summary()
+    assert summ["cache_replica_loads"] == st["replica_loads"]
+    rep = s.crossreq_report()
+    assert "dedup" in rep and "global_cache" in rep
+
+
+def test_all_modes_complete_with_crossreq(small_index, embedder):
+    for mode in ["sequential", "async", "hedra"]:
+        demb = DuplicateTrafficEmbedder(embedder, dup_ratio=0.5, pool_size=3)
+        be = SimBackend(small_index, demb, cost_model=RET_BOUND)
+        s = Server(small_index, demb, mode=mode, backend=be, nprobe=12,
+                   topk=5, **CROSSREQ)
+        for i, t in enumerate(poisson_arrivals(20.0, 12, seed=3)):
+            s.add_request(f"q{i}", workflows.build(NAMES[i % len(NAMES)]),
+                          arrival_us=t)
+        m = s.run()
+        assert m.finished == 12, mode
+
+
+# ------------------------------------------------- single-source bookkeeping
+
+
+def test_metrics_mirror_dispatcher_completed_us(small_index, embedder):
+    s, _, m = _serve(small_index, embedder, crossreq=False, nw=3, n=20)
+    rep = s.sched.dispatcher.report()
+    assert m.ret_busy_per_worker == rep["completed_us"]
+    # everything dispatched also completed (run drained)
+    assert rep["busy_us"] == pytest.approx(rep["completed_us"])

@@ -1,0 +1,25 @@
+"""Example smoke test: the end-to-end real-execution driver must run with
+the cross-request layer enabled (``--crossreq``) on tiny shapes."""
+import importlib.util
+import os
+import sys
+
+import pytest
+
+
+def _load_example(name: str):
+    path = os.path.join(os.path.dirname(__file__), "..", "examples",
+                        f"{name}.py")
+    spec = importlib.util.spec_from_file_location(f"examples_{name}", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.mark.slow
+def test_serve_rag_e2e_smoke_with_crossreq(capsys):
+    mod = _load_example("serve_rag_e2e")
+    mod.main(["--smoke", "--crossreq", "--n-requests", "4"])
+    out = capsys.readouterr().out
+    assert "real-execution RAG serving" in out
+    assert "crossreq report:" in out

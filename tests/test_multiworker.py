@@ -92,6 +92,47 @@ def test_round_robin_cycles_and_bad_policy_rejected():
         dispatch.RetrievalDispatcher(2, 8, policy="nope")
 
 
+def test_order_by_slack_tie_break_is_deterministic():
+    """Equal slack -> arrival then request_id break the tie, so assembly
+    order (and therefore dispatch) is stable under input permutation."""
+    g = workflows.build("one-shot")
+    budget = TimeBudget()
+    cm = ClusterCostModel()
+    sizes = np.full(8, 100)
+    reqs = [RequestContext(rid, g, {}, arrival_us=0.0, slo_us=1e6)
+            for rid in (3, 1, 2, 0)]
+    expected = [0, 1, 2, 3]
+    for perm in ([0, 1, 2, 3], [3, 2, 1, 0], [2, 0, 3, 1]):
+        order = dispatch.order_by_slack(
+            [reqs[i] for i in perm], now=0.0, budget=budget, cost_model=cm,
+            sizes=sizes, default_slo_us=1e4)
+        assert [r.request_id for r in order] == expected
+    # arrival breaks ties ahead of request_id
+    early = RequestContext(9, g, {}, arrival_us=-5.0, slo_us=1e6 + 5.0)
+    order = dispatch.order_by_slack(reqs + [early], now=0.0, budget=budget,
+                                    cost_model=cm, sizes=sizes,
+                                    default_slo_us=1e4)
+    assert order[0].request_id == 9
+
+
+def test_policies_pick_stable_workers_under_equal_load():
+    """Guards the replica-routing refactor: with equal load / no history,
+    every policy must resolve ties deterministically (lowest wid)."""
+    for policy in ("affinity", "least_loaded"):
+        d = dispatch.RetrievalDispatcher(4, 8, policy=policy)
+        assert [d.pick_worker([3], [0, 1, 2, 3]) for _ in range(3)] == [0, 0, 0]
+        assert d.pick_worker([3], [2, 3]) == 2
+    # equal affinity history on two workers -> equal load tie -> lowest wid
+    d = dispatch.RetrievalDispatcher(3, 8, policy="affinity")
+    d.note_dispatch(1, [5])
+    d.note_dispatch(2, [5])
+    assert d.pick_worker([5], [1, 2]) == 1
+    # round_robin is a deterministic cycle regardless of load
+    d = dispatch.RetrievalDispatcher(3, 8, policy="round_robin")
+    d.note_busy(0, 1e6)
+    assert [d.pick_worker([0], [0, 1, 2]) for _ in range(4)] == [0, 1, 2, 0]
+
+
 def test_order_by_slack_puts_tight_deadlines_first():
     g = workflows.build("one-shot")
     budget = TimeBudget()

@@ -102,6 +102,47 @@ def test_journal_replay(tmp_path, small_index, embedder):
     assert len(Server.replay_unfinished(p)) == 1
 
 
+def test_journal_roundtrip_with_midrun_completion(tmp_path, small_index, embedder):
+    """write_journal -> replay_unfinished round-trip on a run cut off
+    mid-flight: completed requests are journaled as finished (with their
+    event history) and excluded from replay; in-flight/pending ones are
+    returned for re-admission, and re-admitting them drains the backlog."""
+    import json
+
+    p = str(tmp_path / "journal.json")
+    be = SimBackend(small_index, embedder, cost_model=RET_HEAVY)
+    s = Server(small_index, embedder, mode="hedra", backend=be, journal_path=p)
+    for i, t in enumerate(poisson_arrivals(8.0, 10, seed=9)):
+        s.add_request(f"q{i}", workflows.build(NAMES[i % len(NAMES)]),
+                      arrival_us=t)
+    # stop the clock early so some requests complete and some do not
+    m = s.run(max_time_us=1.0e6)
+    assert 0 < m.finished < 10, "cutoff must leave a mix of done/undone"
+    with open(p) as f:
+        rows = json.load(f)
+    assert len(rows) == 10
+    by_id = {r["request_id"]: r for r in rows}
+    done_ids = {r.request_id for r in s.sched.done}
+    for rid, row in by_id.items():
+        assert row["finished"] == (rid in done_ids)
+        if row["finished"]:
+            assert row["finish_us"] >= 0
+            assert any(e == "ret_stage_start" for _, e in row["events"])
+        assert row["input"] == f"q{rid}"
+        assert row["graph"] in NAMES
+    unfinished = Server.replay_unfinished(p)
+    assert {r["request_id"] for r in unfinished} == set(by_id) - done_ids
+    # round-trip: re-admit the unfinished rows into a fresh server
+    s2 = Server(small_index, embedder, mode="hedra",
+                backend=SimBackend(small_index, embedder,
+                                   cost_model=RET_HEAVY))
+    for row in unfinished:
+        s2.add_request(row["input"], workflows.build(row["graph"]),
+                       arrival_us=0.0)
+    m2 = s2.run()
+    assert m2.finished == len(unfinished)
+
+
 def test_hot_cache_integration(small_index, embedder):
     hyb = HybridRetrievalEngine(small_index, cache_capacity=10,
                                 update_interval=10, transit_substages=1,
