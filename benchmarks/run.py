@@ -22,6 +22,7 @@ MODULES = [
     ("offline", "benchmarks.bench_offline"),          # Fig. 13
     ("concurrent", "benchmarks.bench_concurrent"),    # Fig. 14
     ("multiworker", "benchmarks.bench_multiworker"),  # retrieval-pool scaling
+    ("serving", "benchmarks.bench_serving"),          # streaming goodput sweep
     ("plan", "benchmarks.bench_plan"),                # SoA sub-stage executor
     ("crossreq", "benchmarks.bench_crossreq"),        # cross-request layer
     ("speculation", "benchmarks.bench_speculation"),  # Fig. 17

@@ -23,6 +23,7 @@ Modes (paper baselines, same loop, different policy switches):
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Optional
 
 import numpy as np
@@ -72,6 +73,15 @@ class SchedulerConfig:
     global_cache_size: int = 0
     dedup_threshold: float = 0.0
     replication_factor: int = 1
+    # --- streaming admission control (serving/dispatch.AdmissionController);
+    # both off by default, in which case the pre-loaded batch path is
+    # bit-identical to the legacy run-to-completion loop.  max_pending bounds
+    # the arrival queue (0 = unbounded); admission_control additionally sheds
+    # requests whose remaining SLO slack cannot cover a cost-model lower
+    # bound of one pass over their graph, scaled by shed_margin.
+    max_pending: int = 0
+    admission_control: bool = False
+    shed_margin: float = 1.0
 
     @classmethod
     def preset(cls, mode: str, **kw) -> "SchedulerConfig":
@@ -122,22 +132,101 @@ class Metrics:
     replica_routes: int = 0
     # hybrid-engine CacheStats snapshot, populated at the end of run()
     cache_stats: dict = dataclasses.field(default_factory=dict)
+    # streaming admission + per-finish log: (finish_us, latency_us, under_slo)
+    # rows power the window-based rates that exclude idle warmup/drain time
+    submitted: int = 0
+    shed_queue_full: int = 0
+    shed_infeasible: int = 0
+    finish_log: list = dataclasses.field(default_factory=list)
 
     @property
     def ret_busy_us(self) -> float:
         return float(sum(self.ret_busy_per_worker))
+
+    @property
+    def shed(self) -> int:
+        return self.shed_queue_full + self.shed_infeasible
+
+    # ------------------------------------------------------ windowed rates
+    def window_summary(self, start_us: float, end_us: float) -> dict:
+        """Rates/percentiles over finishes with ``start_us <= t < end_us``.
+
+        ``summary()``'s ``throughput_rps`` divides by the *whole* simulated
+        span including idle warmup and drain, which understates steady-state
+        rates of streaming runs; this window variant is the streaming-side
+        counterpart (goodput = finished under SLO per second)."""
+        span = max(float(end_us) - float(start_us), 1e-9)
+        rows = [f for f in self.finish_log if start_us <= f[0] < end_us]
+        lat = np.asarray([l for _, l, _ in rows], np.float64)
+        good = sum(1 for _, _, u in rows if u)
+        return {
+            "window_start_us": float(start_us),
+            "window_end_us": float(end_us),
+            "finished": len(rows),
+            "finished_under_slo": int(good),
+            "throughput_rps": len(rows) / (span / 1e6),
+            "goodput_rps": good / (span / 1e6),
+            "p50_latency_ms": float(np.percentile(lat, 50) / 1e3) if lat.size else float("nan"),
+            "p95_latency_ms": float(np.percentile(lat, 95) / 1e3) if lat.size else float("nan"),
+        }
+
+    def goodput_timeline(self, window_us: float, step_us: float = 0.0) -> list:
+        """Sliding-window goodput samples ``[(t_end_us, goodput_rps), ...]``
+        stepping the window end by ``step_us`` (default: half a window) over
+        the span of the finish log."""
+        if not self.finish_log:
+            return []
+        window_us = float(window_us)
+        step = float(step_us) if step_us > 0 else window_us / 2.0
+        t0 = min(f[0] for f in self.finish_log)
+        t1 = max(f[0] for f in self.finish_log)
+        out = []
+        t = t0 + window_us
+        # at least one window even when the finish span is shorter than the
+        # window — an empty list would be indistinguishable from no goodput
+        t_end = max(t1 + step, t0 + window_us)
+        while t <= t_end:
+            good = sum(1 for f in self.finish_log
+                       if t - window_us <= f[0] < t and f[2])
+            out.append((float(t), good / (window_us / 1e6)))
+            t += step
+        return out
 
     def summary(self) -> dict:
         lat = np.asarray(self.latencies_us, np.float64)
         t = max(self.sim_time_us, 1e-9)
         per = np.asarray(self.ret_busy_per_worker or [0.0], np.float64)
         util = per / t
+        # steady-state window: [first finish, last finish) + the last finish
+        # itself — excludes the idle warmup before the first completion and
+        # any drain after the last one (a batch run with a single burst sees
+        # roughly the same span as the legacy whole-run rates).  A
+        # degenerate span (every finish at one event instant, e.g. one
+        # generation batch completing together) has no meaningful rate —
+        # fall back to the whole-run figures instead of dividing by ~0.
+        if len(self.finish_log) >= 2:
+            f0 = min(f[0] for f in self.finish_log)
+            f1 = max(f[0] for f in self.finish_log)
+            steady = (self.window_summary(f0, np.nextafter(f1, np.inf))
+                      if f1 > f0 else None)
+        else:
+            steady = None
+        good = sum(1 for _, _, u in self.finish_log if u)
         return {
             "finished": self.finished,
             "avg_latency_ms": float(lat.mean() / 1e3) if lat.size else float("nan"),
             "p50_latency_ms": float(np.percentile(lat, 50) / 1e3) if lat.size else float("nan"),
             "p95_latency_ms": float(np.percentile(lat, 95) / 1e3) if lat.size else float("nan"),
             "throughput_rps": self.finished / (t / 1e6),
+            "goodput_rps": good / (t / 1e6),
+            "steady_throughput_rps": steady["throughput_rps"]
+            if steady else self.finished / (t / 1e6),
+            "steady_goodput_rps": steady["goodput_rps"]
+            if steady else good / (t / 1e6),
+            "submitted": self.submitted,
+            "shed": self.shed,
+            "shed_queue_full": self.shed_queue_full,
+            "shed_infeasible": self.shed_infeasible,
             "gen_util": self.gen_busy_us / t,
             "num_ret_workers": int(per.size),
             "ret_util": float(util.mean()),
@@ -215,10 +304,22 @@ class WavefrontScheduler:
             replica_map=self.crossreq.replicas if self.crossreq else None)
         self.metrics = Metrics()
         self.metrics.ret_busy_per_worker = [0.0] * self.num_ret_workers
-        self.pending: list[RequestContext] = []
+        # arrival queue: heap keyed (arrival_us, request_id) — O(log n)
+        # admission instead of the old sort-on-every-insert list
+        self._pending: list[tuple[float, int, RequestContext]] = []
         self.active: list[RequestContext] = []
         self.done: list[RequestContext] = []
         self._cluster_sizes = index.cluster_sizes()
+        # streaming event-loop state: lives on the instance so step() can
+        # leave jobs in flight between calls and submissions can interleave
+        self.now = 0.0
+        self._gen_job = None
+        self._ret_jobs: list = [None] * self.num_ret_workers
+        self.admission = None
+        if config.max_pending > 0 or config.admission_control:
+            self.admission = dispatch_mod.AdmissionController(
+                config, self.budget, self.backend.cluster_cost_model,
+                self._cluster_sizes)
         self._ret_fifo: list[RequestContext] = []  # coarse-mode stage queue
         self._spec_ret_round: dict[int, int] = {}  # req -> last spec-ret round
         # request_id -> (query_vec, cluster queue) precomputed in one batched
@@ -226,9 +327,31 @@ class WavefrontScheduler:
         self._probe_hints: dict[int, tuple] = {}
 
     # ------------------------------------------------------------------ API
-    def add_request(self, req: RequestContext) -> None:
-        self.pending.append(req)
-        self.pending.sort(key=lambda r: r.arrival_us)
+    @property
+    def pending(self) -> list[RequestContext]:
+        """Queued (not yet admitted-to-active) requests in arrival order."""
+        return [item[2] for item in sorted(self._pending, key=lambda x: x[:2])]
+
+    def add_request(self, req: RequestContext) -> bool:
+        """Queue a request for admission at its arrival time.  Returns False
+        when the admission layer sheds it (bounded queue / infeasible
+        deadline) — only possible when a SchedulerConfig admission knob is
+        enabled; the default configuration admits unconditionally."""
+        if self.admission is not None:
+            in_system = len(self._pending) + len(self.active)
+            dec = self.admission.evaluate(req, self.now, in_system,
+                                          active=self.active)
+            if not dec.admitted:
+                if dec.reason == "queue_full":
+                    self.metrics.shed_queue_full += 1
+                else:
+                    self.metrics.shed_infeasible += 1
+                req.state["_shed"] = dec.reason
+                return False
+        self.metrics.submitted += 1
+        heapq.heappush(self._pending,
+                       (float(req.arrival_us), req.request_id, req))
+        return True
 
     # -------------------------------------------------------------- helpers
     def _enter_stage(self, req: RequestContext, now: float) -> None:
@@ -413,8 +536,10 @@ class WavefrontScheduler:
         req.finish_us = now
         lat = now - req.arrival_us
         self.metrics.latencies_us.append(lat)
-        if lat > (req.slo_us or self.cfg.slo_us):
+        under_slo = lat <= (req.slo_us or self.cfg.slo_us)
+        if not under_slo:
             self.metrics.slo_violations += 1
+        self.metrics.finish_log.append((now, lat, under_slo))
         self.metrics.finished += 1
         self.active.remove(req)
         self.done.append(req)
@@ -671,78 +796,157 @@ class WavefrontScheduler:
         return raw
 
     # ------------------------------------------------------------ main loop
-    def run(self, max_time_us: float = 4e9) -> Metrics:
-        now = 0.0
-        gen_job = None
+    def _cycle(self, *, horizon: Optional[float] = None,
+               hard_cutoff: Optional[float] = None) -> str:
+        """One scheduling cycle: admit arrivals due at ``self.now``, make
+        speculation decisions, assemble work for idle workers, then advance
+        the event clock to the next completion/arrival and process it.
+
+        Returns:
+          ``"advanced"``  the clock moved (or instant progress was made);
+                          call again.
+          ``"done"``      nothing pending, in flight, or active.
+          ``"horizon"``   the next event lies beyond ``horizon``; the clock
+                          did not move and in-flight jobs stay in flight
+                          (streaming ``step()`` stop condition).
+          ``"cutoff"``    the clock moved past ``hard_cutoff`` (legacy
+                          ``run(max_time_us)`` stop condition; completions at
+                          that instant are *not* processed, matching the
+                          pre-streaming batch loop exactly).
+        """
+        now = self.now
         nw = self.num_ret_workers
-        ret_jobs: list = [None] * nw
+        # admit arrivals (probe orders batched across the whole cycle)
+        admitted = []
+        while self._pending and self._pending[0][0] <= now:
+            key_t, rid, req = heapq.heappop(self._pending)
+            if req.arrival_us != key_t:
+                # the request was re-dated after queuing (e.g. journal
+                # recovery deferring re-admission); lazily re-key with the
+                # live arrival instead of admitting at the stale stamp
+                heapq.heappush(self._pending,
+                               (float(req.arrival_us), rid, req))
+                continue
+            self.active.append(req)
+            admitted.append(req)
+        if admitted:
+            self._prime_probe_orders(admitted, now)
+            for req in admitted:
+                self._enter_stage(req, now)
+        # speculation decisions on the current wavefront
+        if self.cfg.speculation.enabled:
+            self._maybe_spec_generation(now)
+        # dispatch to idle workers
+        ret_inflight = any(j is not None for j in self._ret_jobs)
+        sequential_lock = (self.cfg.mode == "sequential" and
+                           (self._gen_job is not None or ret_inflight))
+        if self._gen_job is None and not sequential_lock:
+            self._gen_job = self._assemble_gen(now)
+        sequential_lock = (self.cfg.mode == "sequential" and
+                           (self._gen_job is not None or ret_inflight))
+        idle = [w for w in range(nw) if self._ret_jobs[w] is None]
+        if idle and not sequential_lock:
+            for wid, job in self._assemble_ret(now, idle).items():
+                self._ret_jobs[wid] = job
+        # advance virtual time
+        events = []
+        if self._gen_job:
+            events.append(self._gen_job["end"])
+        events.extend(j["end"] for j in self._ret_jobs if j is not None)
+        if self._pending:
+            events.append(self._pending[0][0])
+        if not events:
+            if self.active:
+                # no work assembled but requests active -> enter stages
+                for r in list(self.active):
+                    self._enter_stage(r, now)
+                if not self.active or any(r.gen or r.ret for r in self.active):
+                    return "advanced"
+                raise RuntimeError(
+                    f"deadlock: {len(self.active)} active requests, no work")
+            return "done"
+        nxt = min(events)
+        if horizon is not None and nxt > horizon:
+            return "horizon"
+        self.now = now = nxt
+        if hard_cutoff is not None and now > hard_cutoff:
+            return "cutoff"
+        # completions
+        if self._gen_job and self._gen_job["end"] <= now:
+            self.metrics.gen_busy_us += self._gen_job["dur"]
+            self._complete_gen(self._gen_job, now)
+            self._gen_job = None
+        for wid in range(nw):
+            job = self._ret_jobs[wid]
+            if job and job["end"] <= now:
+                # the dispatcher is the single policy-side load source;
+                # Metrics mirrors its completed share instead of
+                # double-booking an accumulator of its own
+                self.dispatcher.note_complete(wid, job["dur"])
+                self.metrics.ret_busy_per_worker[wid] = (
+                    self.dispatcher.workers[wid].completed_us)
+                self._complete_ret(job, now)
+                self._ret_jobs[wid] = None
+        return "advanced"
+
+    def run(self, max_time_us: float = 4e9) -> Metrics:
+        """Run to completion (or the time cutoff) from the current clock.
+        On a fresh scheduler with every request pre-loaded this is the
+        legacy batch loop, event for event; after streaming ``step()`` /
+        mid-run submissions it drains whatever remains."""
         guard = 0
         while True:
             guard += 1
             if guard > 5_000_000:
                 raise RuntimeError("scheduler stuck — no progress")
-            # admit arrivals (probe orders batched across the whole cycle)
-            admitted = []
-            while self.pending and self.pending[0].arrival_us <= now:
-                req = self.pending.pop(0)
-                self.active.append(req)
-                admitted.append(req)
-            if admitted:
-                self._prime_probe_orders(admitted, now)
-                for req in admitted:
-                    self._enter_stage(req, now)
-            # speculation decisions on the current wavefront
-            if self.cfg.speculation.enabled:
-                self._maybe_spec_generation(now)
-            # dispatch to idle workers
-            ret_inflight = any(j is not None for j in ret_jobs)
-            sequential_lock = (self.cfg.mode == "sequential" and
-                               (gen_job is not None or ret_inflight))
-            if gen_job is None and not sequential_lock:
-                gen_job = self._assemble_gen(now)
-            sequential_lock = (self.cfg.mode == "sequential" and
-                               (gen_job is not None or ret_inflight))
-            idle = [w for w in range(nw) if ret_jobs[w] is None]
-            if idle and not sequential_lock:
-                for wid, job in self._assemble_ret(now, idle).items():
-                    ret_jobs[wid] = job
-            # advance virtual time
-            events = []
-            if gen_job:
-                events.append(gen_job["end"])
-            events.extend(j["end"] for j in ret_jobs if j is not None)
-            if self.pending:
-                events.append(self.pending[0].arrival_us)
-            if not events:
-                if self.active:
-                    # no work assembled but requests active -> enter stages
-                    for r in list(self.active):
-                        self._enter_stage(r, now)
-                    if any(r.gen or r.ret for r in self.active):
-                        continue
-                    raise RuntimeError(
-                        f"deadlock: {len(self.active)} active requests, no work")
+            status = self._cycle(hard_cutoff=max_time_us)
+            if status in ("done", "cutoff"):
                 break
-            now = min(events)
-            if now > max_time_us:
+        return self._finalize_metrics()
+
+    def step(self, until_us: float) -> Metrics:
+        """Incremental streaming core: advance the event clock to
+        ``until_us``, processing every completion/arrival due by then, and
+        return with any later-ending jobs still in flight.  Mid-run
+        submissions (``add_request`` with ``arrival_us >= self.now``) between
+        ``step()`` calls interleave exactly as if they had been pre-loaded."""
+        until = float(until_us)
+        if until <= self.now:
+            # the clock is already at (or past) the horizon: defer
+            # admission+assembly to the next cycle, so several submissions
+            # stamped with the *same* arrival time — step(t); submit(a, t);
+            # step(t); submit(b, t) — are admitted together there, exactly
+            # as the batch path admits equal arrivals in one cycle
+            self.metrics.sim_time_us = self.now
+            return self.metrics
+        guard = 0
+        while True:
+            guard += 1
+            if guard > 5_000_000:
+                raise RuntimeError("scheduler stuck — no progress")
+            status = self._cycle(horizon=until)
+            if status != "advanced":
                 break
-            # completions
-            if gen_job and gen_job["end"] <= now:
-                self.metrics.gen_busy_us += gen_job["dur"]
-                self._complete_gen(gen_job, now)
-                gen_job = None
-            for wid in range(nw):
-                job = ret_jobs[wid]
-                if job and job["end"] <= now:
-                    # the dispatcher is the single policy-side load source;
-                    # Metrics mirrors its completed share instead of
-                    # double-booking an accumulator of its own
-                    self.dispatcher.note_complete(wid, job["dur"])
-                    self.metrics.ret_busy_per_worker[wid] = (
-                        self.dispatcher.workers[wid].completed_us)
-                    self._complete_ret(job, now)
-                    ret_jobs[wid] = None
-        self.metrics.sim_time_us = now
+            if self.now >= until:
+                # the clock just reached the horizon: stop *before* the next
+                # cycle's admission+assembly phase, so a submission stamped
+                # exactly ``until`` (including one coinciding with the
+                # completion we just processed) still joins that assembly —
+                # the batch loop admits arrivals ahead of assembly within
+                # the same cycle, and fingerprint identity requires the
+                # streaming path to preserve that ordering at exact ties
+                break
+        if until > self.now:
+            self.now = until
+        self.metrics.sim_time_us = self.now
+        return self.metrics
+
+    def drain(self, max_time_us: float = 4e9) -> Metrics:
+        """Finish all admitted/in-flight work (streaming shutdown)."""
+        return self.run(max_time_us=max_time_us)
+
+    def _finalize_metrics(self) -> Metrics:
+        self.metrics.sim_time_us = self.now
         hyb = getattr(self.backend, "hybrid", None)
         if hyb is not None:
             self.metrics.cache_stats = hyb.stats()

@@ -10,6 +10,23 @@ The server owns admission (arrival times / Poisson open-loop), request-state
 journaling (fault tolerance: completed requests are replayable), and the
 wavefront scheduler + backend pair.
 
+Streaming front-end (the paper's heterogeneous open-loop scenario): requests
+can be submitted *mid-run* and the event clock advanced incrementally::
+
+    s = Server(index, embedder, mode="hedra",
+               max_pending=64,           # bounded arrival queue
+               admission_control=True)   # deadline-infeasibility shedding
+    for item in mix.sample(n=500, rate_per_s=12.0):   # serving/workload.py
+        s.step(item.arrival_us)                        # advance the clock
+        s.submit(item.text, item.workflow, arrival_us=item.arrival_us)
+    metrics = s.run()                                  # drain
+    metrics.window_summary(warmup_us, end_us)          # steady-state goodput
+
+or equivalently in one call: ``metrics = s.serve(mix.sample(500, 12.0))``.
+With no mid-run submissions and admission control disabled, the pre-loaded
+batch path is bit-identical (per-request event fingerprints) to the legacy
+run-to-completion loop.
+
 Cross-request coordination (``repro.crossreq``) is enabled through the same
 keyword overrides as every other scheduler knob::
 
@@ -22,12 +39,10 @@ keyword overrides as every other scheduler knob::
 """
 from __future__ import annotations
 
-import dataclasses
 import itertools
 import json
-from typing import Optional
-
-import numpy as np
+import os
+from typing import Iterable, Optional, Union
 
 from repro.core.backends import SimBackend
 from repro.core.ragraph import RAGraph
@@ -60,17 +75,74 @@ class Server:
         self._ids = itertools.count()
 
     # ------------------------------------------------------------------ API
-    def add_request(self, input_text: str, graph: RAGraph,
-                    arrival_us: float = 0.0) -> int:
+    def _build_request(self, input_text: str, graph: RAGraph,
+                       arrival_us: float) -> RequestContext:
         rid = next(self._ids)
         graph.validate()
         state = {"input": input_text,
                  "_target_rounds": self.workload.iterations(rid)}
-        req = RequestContext(request_id=rid, graph=graph, state=state,
-                             arrival_us=float(arrival_us),
-                             slo_us=self.workload.slo_us(rid))
-        self.sched.add_request(req)
-        return rid
+        return RequestContext(request_id=rid, graph=graph, state=state,
+                              arrival_us=float(arrival_us),
+                              slo_us=self.workload.slo_us(rid, graph.name))
+
+    def add_request(self, input_text: str, graph: RAGraph,
+                    arrival_us: float = 0.0) -> Optional[int]:
+        """Pre-load a request (batch path).  Returns its id, or ``None``
+        when an enabled admission-control knob sheds it (check
+        ``is not None`` — id 0 is a valid request)."""
+        req = self._build_request(input_text, graph, arrival_us)
+        if not self.sched.add_request(req):
+            return None
+        return req.request_id
+
+    def submit(self, input_text: str, graph: Union[RAGraph, str],
+               arrival_us: Optional[float] = None) -> Optional[int]:
+        """Admit a request *mid-run* (streaming path).  ``graph`` may be a
+        built RAGraph or a workflow name; ``arrival_us`` defaults to the
+        current event clock and must not lie in its past — the virtual
+        clock cannot honor a stale stamp, and silently rewriting it would
+        corrupt latency/SLO accounting.  Returns the request id, or
+        ``None`` when the admission layer sheds it (check ``is not None``
+        — id 0 is a valid request; ``Metrics.shed_*`` has the reason)."""
+        if isinstance(graph, str):
+            from repro import workflows
+
+            graph = workflows.build(graph)
+        now = self.sched.now
+        arrival = now if arrival_us is None else float(arrival_us)
+        if arrival < now:
+            raise ValueError(
+                f"arrival_us={arrival} is in the past (event clock at "
+                f"{now}); submissions must be arrival-ordered")
+        req = self._build_request(input_text, graph, arrival)
+        if not self.sched.add_request(req):
+            return None
+        return req.request_id
+
+    def step(self, until_us: float) -> Metrics:
+        """Advance the serving clock to ``until_us`` (streaming)."""
+        return self.sched.step(until_us)
+
+    def serve(self, stream: Iterable, max_time_us: float = 4e9) -> Metrics:
+        """Open-loop streaming serve: walk an arrival-ordered ``stream`` of
+        requests, stepping the event clock to each arrival before submitting
+        it (so admission decisions see true in-flight load), then drain.
+
+        Stream items are either ``serving.workload.StreamItem``-likes (with
+        ``.arrival_us``/``.workflow``/``.text``) or ``(arrival_us, text,
+        graph_or_workflow_name)`` tuples."""
+        for item in stream:
+            if hasattr(item, "arrival_us"):
+                arrival, text, graph = (item.arrival_us, item.text,
+                                        item.workflow)
+            else:
+                arrival, text, graph = item
+            arrival = float(arrival)
+            if arrival > max_time_us:
+                break
+            self.sched.step(min(arrival, max_time_us))
+            self.submit(text, graph, arrival_us=arrival)
+        return self.run(max_time_us=max_time_us)
 
     def run(self, max_time_us: float = 4e9) -> Metrics:
         m = self.sched.run(max_time_us=max_time_us)
@@ -86,7 +158,12 @@ class Server:
 
     # ------------------------------------------------------- fault tolerance
     def write_journal(self, path: str) -> None:
-        """Request journal: enough to replay / resume after a crash."""
+        """Request journal: enough to replay / resume after a crash.
+
+        One JSON row per line, written to a temp file and atomically
+        ``os.replace``d into place — a crash mid-write leaves the previous
+        journal intact instead of a truncated one, and a crash between
+        write and rename at worst leaves a stale temp file behind."""
         rows = []
         for r in self.sched.done + self.sched.active + self.sched.pending:
             rows.append({
@@ -98,12 +175,37 @@ class Server:
                 "finish_us": r.finish_us,
                 "events": [(t, e) for t, e, _ in r.events],
             })
-        with open(path, "w") as f:
-            json.dump(rows, f)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            for row in rows:
+                f.write(json.dumps(row) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+
+    @staticmethod
+    def read_journal(path: str) -> list[dict]:
+        """All journal rows.  Reads the JSONL format (one request per line),
+        tolerating a truncated trailing line from a crash mid-append; the
+        legacy single-JSON-array format is still accepted."""
+        with open(path) as f:
+            text = f.read()
+        if text.lstrip().startswith("["):  # legacy array journal
+            return json.loads(text)
+        rows = []
+        lines = text.splitlines()
+        for i, line in enumerate(lines):
+            if not line.strip():
+                continue
+            try:
+                rows.append(json.loads(line))
+            except json.JSONDecodeError:
+                if i == len(lines) - 1:
+                    break  # partial trailing row: drop it, keep the rest
+                raise
+        return rows
 
     @staticmethod
     def replay_unfinished(path: str) -> list[dict]:
         """Requests that must be re-admitted after restart."""
-        with open(path) as f:
-            rows = json.load(f)
-        return [r for r in rows if not r["finished"]]
+        return [r for r in Server.read_journal(path) if not r["finished"]]

@@ -28,6 +28,11 @@ This module keeps both concerns out of the scheduler loop:
 * ``order_by_slack`` — sorts a wavefront by SLO slack
   ``deadline - now - estimated_remaining`` so the tightest requests are
   assembled (and therefore dispatched) first.
+* ``AdmissionController`` — streaming admission control: a bounded pending
+  queue plus deadline-infeasibility load shedding.  A request is shed when
+  its remaining SLO slack cannot cover a cost-model lower bound of one pass
+  over its graph — admitting it could only burn worker time on a guaranteed
+  SLO violation and push *other* requests past their deadlines.
 """
 from __future__ import annotations
 
@@ -204,3 +209,97 @@ def order_by_slack(reqs, now: float, budget, cost_model, sizes,
                                     default_slo_us),
                        r.arrival_us, r.request_id),
     )
+
+
+# ---------------------------------------------------------------------------
+# Streaming admission control
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AdmissionDecision:
+    admitted: bool
+    reason: str = "admitted"  # admitted | queue_full | deadline_infeasible
+    lower_bound_us: float = 0.0
+    slack_us: float = float("inf")
+
+
+class AdmissionController:
+    """Admission policy for the streaming front-end.
+
+    Two independent gates, each enabled by its SchedulerConfig knob:
+
+    * ``max_pending > 0`` — bounded in-system queue: once ``max_pending``
+      requests are in the system (queued + in flight), further submissions
+      are shed (``queue_full``) instead of growing the backlog without
+      bound past the saturation knee.
+    * ``admission_control`` — deadline-infeasibility shedding: a request is
+      shed (``deadline_infeasible``) when its remaining SLO slack is below
+      ``shed_margin`` times a cost-model lower bound of serving it, where
+      the bound is its own minimal service time (at least one smallest-
+      cluster scan per retrieval node, at least one decode step per
+      generation node) *plus* the queueing delay implied by the work
+      already in the system (first-order remaining-time estimate of every
+      in-flight request, spread over the retrieval pool).  Admitting such
+      a request could only burn worker time on a guaranteed SLO violation
+      and push other requests past their deadlines; ``shed_margin < 1``
+      relaxes the gate (e.g. to keep requests a cross-request cache answer
+      might still rescue), ``> 1`` adds headroom.
+
+    Decisions are pure functions of (config, graph shape, clock, in-system
+    load, EMA cost estimates), so a fixed workload seed yields the same
+    shed set on every run.
+    """
+
+    def __init__(self, cfg, budget, cost_model, cluster_sizes):
+        self.cfg = cfg
+        self.budget = budget
+        self.cost_model = cost_model
+        self.sizes = np.asarray(cluster_sizes)
+        self.min_cluster_size = int(self.sizes.min()) if self.sizes.size else 0
+
+    def lower_bound_us(self, req) -> float:
+        """Cost-model lower bound of serving ``req`` in isolation: one
+        smallest-cluster scan per retrieval node + one decode step per
+        generation node (at the current EMA step cost), single pass."""
+        n_ret = sum(1 for n in req.graph.nodes.values()
+                    if n.kind == "retrieval")
+        n_gen = sum(1 for n in req.graph.nodes.values()
+                    if n.kind == "generation")
+        return (n_ret * self.cost_model.cost_us(self.min_cluster_size)
+                + n_gen * self.budget.t_decode_step_us)
+
+    def backlog_us(self, active) -> float:
+        """Queueing-delay lower bound seen by a new arrival: the first-order
+        remaining service time of everything in flight, spread over the
+        retrieval worker pool."""
+        total = sum(
+            estimate_remaining_us(r, self.budget, self.cost_model, self.sizes)
+            for r in active)
+        return total / max(1, int(self.cfg.num_ret_workers))
+
+    def evaluate(self, req, now: float, queue_len: int,
+                 active=()) -> AdmissionDecision:
+        # load-based gates (queue bound, in-flight backlog) only apply to
+        # requests entering service *now* — the streaming path, where the
+        # clock has been stepped to the arrival.  A pre-loaded future
+        # arrival is judged against today's load for work that may have
+        # fully drained by its arrival time, so it only faces the
+        # load-independent isolated-service check.
+        due_now = req.arrival_us <= now
+        if (due_now and self.cfg.max_pending > 0
+                and queue_len >= self.cfg.max_pending):
+            return AdmissionDecision(False, "queue_full")
+        if not self.cfg.admission_control:
+            return AdmissionDecision(True)
+        slo = getattr(req, "slo_us", 0.0) or self.cfg.slo_us
+        lb = self.lower_bound_us(req)
+        if due_now:
+            lb += self.backlog_us(active)
+        # slack remaining at service start: deadline minus the later of the
+        # submission clock and the request's own arrival stamp (a pre-loaded
+        # future arrival still has its whole SLO ahead of it)
+        slack = req.arrival_us + slo - max(now, req.arrival_us)
+        if slack < self.cfg.shed_margin * lb:
+            return AdmissionDecision(False, "deadline_infeasible", lb, slack)
+        return AdmissionDecision(True, "admitted", lb, slack)

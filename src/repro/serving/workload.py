@@ -25,6 +25,11 @@ class WorkloadProfile:
     # scheduler falls back to SchedulerConfig.slo_us for every request
     slo_us_mean: float = 0.0
     slo_us_sigma: float = 0.0  # lognormal spread of per-request deadlines
+    # per-workflow-class SLO tiers (workflow/graph name -> deadline us);
+    # a matching class overrides the sampled per-request SLO, which is how
+    # a heterogeneous mix gives interactive one-shot traffic a tight
+    # deadline while multi-hop workflows get a loose one
+    slo_class_us: dict = dataclasses.field(default_factory=dict)
     seed: int = 7
 
     def _rng(self, request_id: int, node_id: int, tag: int) -> np.random.Generator:
@@ -47,8 +52,12 @@ class WorkloadProfile:
         v = 1 + r.poisson(max(self.iterations_mean - 1.0, 0.0))
         return int(np.clip(v, 1, self.iterations_max))
 
-    def slo_us(self, request_id: int) -> float:
-        """Per-request deadline length; 0.0 means 'use the server default'."""
+    def slo_us(self, request_id: int, workflow: str | None = None) -> float:
+        """Per-request deadline length; 0.0 means 'use the server default'.
+        A workflow whose class has an ``slo_class_us`` tier gets that tier's
+        deadline; otherwise the (lognormal) per-request sample applies."""
+        if workflow is not None and workflow in self.slo_class_us:
+            return float(self.slo_class_us[workflow])
         if self.slo_us_mean <= 0.0:
             return 0.0
         if self.slo_us_sigma <= 0.0:
@@ -70,4 +79,86 @@ PROFILES = {
     "nq": WorkloadProfile("nq", gen_tokens_mean=72, iterations_mean=1.6),
     "wikiqa": WorkloadProfile("wikiqa", gen_tokens_mean=96, iterations_mean=2.6),
     "hotpotqa": WorkloadProfile("hotpotqa", gen_tokens_mean=112, iterations_mean=3.0),
+}
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous-mix load generation (streaming serving)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StreamItem:
+    """One open-loop arrival: consumed by ``Server.serve`` / ``submit``."""
+    arrival_us: float
+    workflow: str
+    text: str = ""
+
+
+@dataclasses.dataclass
+class MixSpec:
+    """A heterogeneous request mix: sampling weights over workflow classes
+    plus optional per-class SLO tiers — the paper's headline scenario of a
+    sustained stream mixing one-shot/HyDE/multistep/IRG/recomp traffic with
+    differing deadlines.
+
+    ``sample`` draws a deterministic open-loop Poisson stream (class choice
+    and inter-arrival gaps both seeded), ``profile`` stamps the SLO tiers
+    onto a WorkloadProfile so the scheduler and the admission layer see the
+    per-class deadlines.
+    """
+
+    name: str = "mixed"
+    # workflow name -> relative weight; empty = uniform over the names given
+    weights: dict = dataclasses.field(default_factory=dict)
+    # workflow name -> deadline us (copied into WorkloadProfile.slo_class_us)
+    slo_tiers_us: dict = dataclasses.field(default_factory=dict)
+    seed: int = 13
+
+    def classes(self) -> list[str]:
+        return sorted(self.weights)
+
+    def sample(self, n: int, rate_per_s: float,
+               seed: int | None = None) -> list[StreamItem]:
+        """n arrivals of a Poisson stream at ``rate_per_s``, workflow classes
+        drawn by weight.  Deterministic for a fixed (spec, seed)."""
+        if not self.weights:
+            raise ValueError(f"MixSpec {self.name!r} has no workflow weights")
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed if seed is None else seed, n]))
+        names = self.classes()
+        w = np.asarray([self.weights[c] for c in names], np.float64)
+        gaps = rng.exponential(1.0 / max(rate_per_s, 1e-9), size=n)
+        arrivals = np.cumsum(gaps) * 1e6
+        picks = rng.choice(len(names), size=n, p=w / w.sum())
+        return [StreamItem(float(arrivals[i]), names[int(picks[i])], f"q{i}")
+                for i in range(n)]
+
+    def profile(self, base: WorkloadProfile | None = None) -> WorkloadProfile:
+        """A WorkloadProfile carrying this mix's per-class SLO tiers."""
+        return dataclasses.replace(base or WorkloadProfile(),
+                                   name=self.name,
+                                   slo_class_us=dict(self.slo_tiers_us))
+
+
+# Named mixes used by benchmarks/bench_serving.py and the examples.  Tier
+# values follow the interactive-vs-batch contrast: one-shot/HyDE answer a
+# user waiting at a prompt, multi-hop pipelines tolerate seconds.
+MIXES = {
+    "pure-oneshot": MixSpec(
+        "pure-oneshot",
+        weights={"one-shot": 1.0},
+        slo_tiers_us={"one-shot": 2.5e6}),
+    "balanced": MixSpec(
+        "balanced",
+        weights={"one-shot": 1.0, "hyde": 1.0, "multistep": 1.0,
+                 "irg": 1.0, "recomp": 1.0},
+        slo_tiers_us={"one-shot": 2.5e6, "hyde": 4e6, "recomp": 6e6,
+                      "multistep": 10e6, "irg": 10e6}),
+    "interactive-heavy": MixSpec(
+        "interactive-heavy",
+        weights={"one-shot": 6.0, "hyde": 2.0, "multistep": 1.0,
+                 "irg": 1.0, "recomp": 2.0},
+        slo_tiers_us={"one-shot": 2e6, "hyde": 3e6, "recomp": 5e6,
+                      "multistep": 12e6, "irg": 12e6}),
 }

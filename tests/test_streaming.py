@@ -1,0 +1,409 @@
+"""Streaming serving runtime: batch/streaming fingerprint equivalence,
+heap-based admission, admission-control shedding, windowed metrics, mix
+specs, and the atomic JSONL journal."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import workflows
+from repro.core.backends import SimBackend
+from repro.core.runtime import RequestContext
+from repro.core.wavefront import Metrics, SchedulerConfig, WavefrontScheduler
+from repro.retrieval.ivf import ClusterCostModel
+from repro.server import Server
+from repro.serving import dispatch
+from repro.serving.workload import (
+    MIXES,
+    MixSpec,
+    WorkloadProfile,
+    poisson_arrivals,
+)
+
+NAMES = ["one-shot", "hyde", "irg", "multistep", "recomp"]
+RET_HEAVY = ClusterCostModel(fixed_us=150.0, per_vector_us=8.0,
+                             per_query_us=2.0)
+
+
+def _server(index, emb, mode="hedra", nw=1, workload=None, **cfg):
+    be = SimBackend(index, emb, cost_model=RET_HEAVY, seed=0)
+    return Server(index, emb, mode=mode, backend=be, workload=workload,
+                  nprobe=12, topk=5, num_ret_workers=nw, **cfg)
+
+
+def _fingerprints(server) -> dict:
+    """request_id -> full event log (times, events, payload reprs)."""
+    return {
+        r.request_id: [(float(t), e, repr(p)) for t, e, p in r.events]
+        for r in server.sched.done
+    }
+
+
+# ------------------------------------------------- batch/streaming identity
+
+
+@pytest.mark.parametrize("mode", ["hedra", "async", "sequential"])
+@pytest.mark.parametrize("nw", [1, 4])
+def test_submit_matches_preloaded_fingerprints(small_index, embedder, mode, nw):
+    """Mid-run submit() at the same arrival times must produce per-request
+    event fingerprints identical to the pre-loaded batch path, across
+    modes and worker counts."""
+    arr = poisson_arrivals(8.0, 20, seed=5)
+    s1 = _server(small_index, embedder, mode, nw)
+    for i, t in enumerate(arr):
+        s1.add_request(f"q{i}", workflows.build(NAMES[i % 5]), arrival_us=t)
+    m1 = s1.run()
+    s2 = _server(small_index, embedder, mode, nw)
+    for i, t in enumerate(arr):
+        s2.step(float(t))
+        s2.submit(f"q{i}", NAMES[i % 5], arrival_us=float(t))
+    m2 = s2.run()
+    assert m1.finished == m2.finished == 20
+    assert _fingerprints(s1) == _fingerprints(s2)
+
+
+def test_serve_stream_matches_preloaded(small_index, embedder):
+    """Server.serve over tuple items == pre-loaded batch run."""
+    arr = poisson_arrivals(6.0, 15, seed=7)
+    s1 = _server(small_index, embedder)
+    for i, t in enumerate(arr):
+        s1.add_request(f"q{i}", workflows.build(NAMES[i % 5]), arrival_us=t)
+    s1.run()
+    s2 = _server(small_index, embedder)
+    s2.serve((float(t), f"q{i}", NAMES[i % 5]) for i, t in enumerate(arr))
+    assert _fingerprints(s1) == _fingerprints(s2)
+
+
+def test_submit_at_exact_event_time_matches_preloaded(small_index, embedder):
+    """A mid-run submission whose arrival coincides *exactly* with a
+    completion event must still join the assembly cycle it would have
+    joined pre-loaded: step() stops at the horizon before the next
+    admission+assembly phase.  (Poisson arrivals never produce exact ties,
+    so this corner needs its own construction.)"""
+    probe = _server(small_index, embedder)
+    for i in range(3):
+        probe.add_request(f"q{i}", workflows.build("one-shot"), arrival_us=0.0)
+    probe.run()
+    times = sorted({t for r in probe.sched.done
+                    for t, _, _ in r.events if t > 0})
+    tie = times[len(times) // 2]  # an actual event instant of the run
+    s1 = _server(small_index, embedder)
+    for i in range(3):
+        s1.add_request(f"q{i}", workflows.build("one-shot"), arrival_us=0.0)
+    s1.add_request("q3", workflows.build("one-shot"), arrival_us=tie)
+    s1.run()
+    s2 = _server(small_index, embedder)
+    for i in range(3):
+        s2.submit(f"q{i}", "one-shot", arrival_us=0.0)
+    s2.step(tie)
+    s2.submit("q3", "one-shot", arrival_us=tie)
+    s2.run()
+    assert _fingerprints(s1) == _fingerprints(s2)
+
+
+def test_tied_submissions_match_preloaded(small_index, embedder):
+    """Several stream items carrying the *same* arrival timestamp must be
+    admitted and assembled together, as the batch path admits equal
+    arrivals in one cycle: step() at an already-reached horizon defers
+    admission instead of cycling between the tied submissions."""
+    arrivals = [1000.0, 5000.0, 5000.0, 5000.0, 9000.0]
+    s1 = _server(small_index, embedder, nw=2)
+    for i, t in enumerate(arrivals):
+        s1.add_request(f"q{i}", workflows.build(NAMES[i % 5]), arrival_us=t)
+    s1.run()
+    s2 = _server(small_index, embedder, nw=2)
+    s2.serve((t, f"q{i}", NAMES[i % 5]) for i, t in enumerate(arrivals))
+    assert _fingerprints(s1) == _fingerprints(s2)
+
+
+def test_step_leaves_inflight_work_and_resumes(small_index, embedder):
+    """step() to a horizon must not complete jobs ending after it; run()
+    afterwards finishes them with the same results as one-shot run()."""
+    s = _server(small_index, embedder)
+    for i in range(6):
+        s.add_request(f"q{i}", workflows.build("one-shot"), arrival_us=0.0)
+    s.step(1.0)  # admits + dispatches, nothing can finish this early
+    assert s.sched.now == 1.0
+    assert s.sched.metrics.finished == 0
+    assert s.sched.active  # in flight
+    m = s.run()
+    assert m.finished == 6
+
+
+# ----------------------------------------------------------- heap admission
+
+
+def test_add_request_order_invariant(small_index, embedder):
+    """The arrival heap admits in (arrival_us, request_id) order no matter
+    the insertion order — results match the sorted-insertion run."""
+    arr = poisson_arrivals(8.0, 12, seed=3)
+    order = np.random.default_rng(0).permutation(12)
+    s1 = _server(small_index, embedder)
+    reqs = {}
+    for i, t in enumerate(arr):  # build all so request ids match
+        reqs[i] = (f"q{i}", workflows.build(NAMES[i % 5]), float(t))
+    for i in range(12):
+        s1.add_request(*reqs[i])
+    s1.run()
+    s2 = _server(small_index, embedder)
+    built = {}
+    for i in range(12):
+        built[i] = s2._build_request(reqs[i][0], reqs[i][1], reqs[i][2])
+    for i in order:  # shuffled insertion of identical request objects
+        s2.sched.add_request(built[int(i)])
+    s2.run()
+    assert _fingerprints(s1) == _fingerprints(s2)
+
+
+def test_pending_property_is_arrival_ordered(small_index, embedder):
+    s = _server(small_index, embedder)
+    for i, t in enumerate([30.0, 10.0, 20.0]):
+        s.add_request(f"q{i}", workflows.build("one-shot"), arrival_us=t)
+    assert [r.arrival_us for r in s.sched.pending] == [10.0, 20.0, 30.0]
+
+
+# ------------------------------------------------------- admission control
+
+
+def test_bounded_queue_sheds_and_is_deterministic(small_index, embedder):
+    mix = MIXES["balanced"]
+    runs = []
+    for _ in range(2):
+        s = _server(small_index, embedder, workload=mix.profile(),
+                    max_pending=4, admission_control=True)
+        m = s.serve(mix.sample(40, 200.0))
+        shed_ids = sorted(set(range(40))
+                          - {r.request_id for r in s.sched.done})
+        runs.append((shed_ids, m.shed_queue_full, m.shed_infeasible,
+                     _fingerprints(s)))
+        assert m.shed > 0
+        assert m.finished + m.shed == 40
+        assert m.submitted == m.finished
+    assert runs[0] == runs[1]  # fixed seed -> identical shed set + events
+
+
+def test_infeasible_deadline_shed(small_index, embedder):
+    """A request whose SLO cannot cover even its isolated service lower
+    bound is rejected at submit time."""
+    wl = WorkloadProfile(slo_class_us={"multistep": 1.0})  # 1 us deadline
+    s = _server(small_index, embedder, workload=wl, admission_control=True)
+    assert s.submit("q0", "multistep", arrival_us=0.0) is None
+    assert s.sched.metrics.shed_infeasible == 1
+    # a feasible one still gets in
+    assert s.submit("q1", "one-shot", arrival_us=0.0) is not None
+    m = s.run()
+    assert m.finished == 1 and m.submitted == 1
+
+
+def test_admission_disabled_admits_everything(small_index, embedder):
+    s = _server(small_index, embedder)
+    assert s.sched.admission is None
+    for i in range(30):
+        assert s.add_request(f"q{i}", workflows.build("one-shot")) == i
+    assert s.run().finished == 30
+
+
+def test_admission_lower_bound_scales_with_graph():
+    cfg = SchedulerConfig.preset("hedra", admission_control=True)
+    from repro.core.substage import TimeBudget
+
+    ac = dispatch.AdmissionController(cfg, TimeBudget(), ClusterCostModel(),
+                                      np.array([100, 200, 300]))
+    one = RequestContext(0, workflows.build("one-shot"), {})
+    multi = RequestContext(1, workflows.build("multistep"), {})
+    assert ac.lower_bound_us(multi) > ac.lower_bound_us(one) > 0.0
+
+
+def test_submit_rejects_stale_arrival(small_index, embedder):
+    """The virtual clock cannot honor a past arrival stamp; silently
+    rewriting it would corrupt latency/SLO accounting."""
+    s = _server(small_index, embedder)
+    s.add_request("q0", workflows.build("one-shot"), arrival_us=0.0)
+    s.step(1000.0)
+    with pytest.raises(ValueError, match="in the past"):
+        s.submit("late", "one-shot", arrival_us=500.0)
+    assert s.submit("ok", "one-shot", arrival_us=1000.0) is not None
+
+
+def test_future_arrivals_not_shed_by_present_load(small_index, embedder):
+    """Load-based gates (queue bound, in-flight backlog) only judge
+    requests due *now*: a pre-loaded batch spread over future arrival
+    times must not be shed against load that will have drained by then."""
+    s = _server(small_index, embedder, max_pending=4, admission_control=True)
+    # 20 future-dated arrivals, far more than max_pending, spread out at a
+    # trivially sustainable rate: all must be admitted
+    for i in range(20):
+        rid = s.add_request(f"q{i}", workflows.build("one-shot"),
+                            arrival_us=1.0 + i * 1e6)
+        assert rid is not None
+    m = s.run()
+    assert m.finished == 20 and m.shed == 0
+
+
+# ------------------------------------------------------ per-class SLO tiers
+
+
+def test_slo_class_tiers_applied(small_index, embedder):
+    wl = WorkloadProfile(slo_us_mean=9e6,
+                         slo_class_us={"one-shot": 1e6, "irg": 5e6})
+    s = _server(small_index, embedder, workload=wl)
+    a = s.add_request("a", workflows.build("one-shot"))
+    b = s.add_request("b", workflows.build("irg"))
+    c = s.add_request("c", workflows.build("hyde"))  # no tier -> sampled
+    by_id = {r.request_id: r
+             for r in s.sched.pending}
+    assert by_id[a].slo_us == 1e6
+    assert by_id[b].slo_us == 5e6
+    assert by_id[c].slo_us == 9e6
+
+
+def test_mix_spec_sampling_deterministic_and_weighted():
+    mix = MixSpec("m", weights={"one-shot": 3.0, "irg": 1.0},
+                  slo_tiers_us={"one-shot": 1e6})
+    a = mix.sample(200, 10.0)
+    b = mix.sample(200, 10.0)
+    assert [(x.arrival_us, x.workflow) for x in a] == \
+        [(x.arrival_us, x.workflow) for x in b]
+    assert all(a[i].arrival_us < a[i + 1].arrival_us for i in range(199))
+    counts = {n: sum(1 for x in a if x.workflow == n)
+              for n in ("one-shot", "irg")}
+    assert counts["one-shot"] > counts["irg"]
+    prof = mix.profile()
+    assert prof.slo_class_us == {"one-shot": 1e6}
+    with pytest.raises(ValueError):
+        MixSpec("empty").sample(5, 1.0)
+
+
+# --------------------------------------------------------- windowed metrics
+
+
+def test_window_summary_excludes_idle_time():
+    m = Metrics()
+    # three finishes between t=10s and t=12s, then the run idles to 100s
+    for t, lat, ok in [(10e6, 1e5, True), (11e6, 2e5, True),
+                       (12e6, 9e6, False)]:
+        m.finish_log.append((t, lat, ok))
+        m.latencies_us.append(lat)
+        m.finished += 1
+    m.sim_time_us = 100e6
+    s = m.summary()
+    assert s["throughput_rps"] == pytest.approx(3 / 100.0)
+    assert s["goodput_rps"] == pytest.approx(2 / 100.0)
+    # steady-state window [first finish, last finish] ignores the idle tail
+    assert s["steady_throughput_rps"] == pytest.approx(3 / 2.0, rel=1e-6)
+    assert s["steady_goodput_rps"] == pytest.approx(2 / 2.0, rel=1e-6)
+    w = m.window_summary(10.5e6, 12.5e6)
+    assert w["finished"] == 2
+    assert w["finished_under_slo"] == 1
+    assert w["goodput_rps"] == pytest.approx(1 / 2.0)
+    assert w["p50_latency_ms"] > 0
+
+
+def test_goodput_timeline_slides():
+    m = Metrics()
+    for t in range(10):  # one good finish per second from t=0..9s
+        m.finish_log.append((t * 1e6, 1e5, True))
+    tl = m.goodput_timeline(window_us=2e6, step_us=1e6)
+    assert len(tl) >= 8
+    mid = [g for _, g in tl[1:-1]]
+    assert all(g == pytest.approx(1.0) for g in mid)
+    # a finish span shorter than the window still yields one sample
+    short = Metrics()
+    short.finish_log = [(0.0, 1e5, True), (0.9e6, 1e5, True)]
+    tl2 = short.goodput_timeline(window_us=2e6)
+    assert len(tl2) >= 1
+    assert tl2[0][1] == pytest.approx(2 / 2.0)
+
+
+def test_steady_rates_fall_back_on_degenerate_span():
+    """All finishes at one event instant (e.g. one generation batch
+    completing together) must not divide by a ~0 window."""
+    m = Metrics()
+    for _ in range(2):
+        m.finish_log.append((1e6, 5e5, True))
+        m.latencies_us.append(5e5)
+        m.finished += 1
+    m.sim_time_us = 10e6
+    s = m.summary()
+    assert s["steady_throughput_rps"] == pytest.approx(s["throughput_rps"])
+    assert s["steady_goodput_rps"] == pytest.approx(s["goodput_rps"])
+
+
+def test_redated_pending_request_admitted_at_live_arrival(small_index, embedder):
+    """Mutating a queued request's arrival_us (journal-recovery deferral
+    pattern) must defer its admission — the heap re-keys lazily instead of
+    admitting at the stale stamp."""
+    s = _server(small_index, embedder)
+    s.add_request("q0", workflows.build("one-shot"), arrival_us=0.0)
+    s.add_request("q1", workflows.build("one-shot"), arrival_us=0.0)
+    deferred = s.sched.pending[1]
+    deferred.arrival_us = 5e6  # re-date after queuing
+    m = s.run()
+    assert m.finished == 2
+    late = next(r for r in s.sched.done if r.request_id == deferred.request_id)
+    assert late.events[0][0] >= 5e6  # first event at the live arrival
+    assert all(lat >= 0 for lat in m.latencies_us)
+
+
+def test_batch_summary_fields_unchanged(small_index, embedder):
+    """Batch runs keep the legacy fields; the new ones coexist."""
+    s = _server(small_index, embedder)
+    for i in range(8):
+        s.add_request(f"q{i}", workflows.build("one-shot"), arrival_us=0.0)
+    summ = s.run().summary()
+    for k in ("finished", "avg_latency_ms", "throughput_rps", "gen_util",
+              "slo_violations"):
+        assert k in summ
+    assert summ["submitted"] == 8
+    assert summ["shed"] == 0
+    assert summ["steady_throughput_rps"] >= summ["throughput_rps"]
+
+
+# ----------------------------------------------------------- atomic journal
+
+
+def test_journal_is_jsonl_and_atomic(tmp_path, small_index, embedder):
+    p = str(tmp_path / "journal.jsonl")
+    s = _server(small_index, embedder, journal_path=p)
+    for i in range(4):
+        s.add_request(f"q{i}", workflows.build("one-shot"), arrival_us=0.0)
+    s.run()
+    # no stray temp files left behind by the write-then-rename
+    assert os.listdir(tmp_path) == ["journal.jsonl"]
+    with open(p) as f:
+        lines = [l for l in f.read().splitlines() if l.strip()]
+    assert len(lines) == 4
+    assert all(json.loads(l)["finished"] for l in lines)
+    assert Server.replay_unfinished(p) == []
+
+
+def test_replay_tolerates_partial_trailing_row(tmp_path, small_index, embedder):
+    p = str(tmp_path / "journal.jsonl")
+    s = _server(small_index, embedder, journal_path=p)
+    for i in range(3):
+        s.add_request(f"q{i}", workflows.build("one-shot"), arrival_us=0.0)
+    s.run()
+    with open(p) as f:
+        whole = f.read()
+    # crash mid-append: the last row is cut off half way
+    with open(p, "w") as f:
+        f.write(whole[: whole.rfind('"request_id"') + 5])
+    rows = Server.read_journal(p)
+    assert len(rows) == 2  # intact prefix survives, partial tail dropped
+    # a partial row in the *middle* is corruption, not a crash tail
+    with open(p, "w") as f:
+        lines = whole.splitlines()
+        f.write(lines[0][:20] + "\n" + lines[1] + "\n")
+    with pytest.raises(json.JSONDecodeError):
+        Server.read_journal(p)
+
+
+def test_read_journal_accepts_legacy_array(tmp_path):
+    p = str(tmp_path / "legacy.json")
+    rows = [{"request_id": 0, "finished": True},
+            {"request_id": 1, "finished": False}]
+    with open(p, "w") as f:
+        json.dump(rows, f)
+    assert Server.read_journal(p) == rows
+    assert [r["request_id"] for r in Server.replay_unfinished(p)] == [1]

@@ -107,8 +107,6 @@ def test_journal_roundtrip_with_midrun_completion(tmp_path, small_index, embedde
     mid-flight: completed requests are journaled as finished (with their
     event history) and excluded from replay; in-flight/pending ones are
     returned for re-admission, and re-admitting them drains the backlog."""
-    import json
-
     p = str(tmp_path / "journal.json")
     be = SimBackend(small_index, embedder, cost_model=RET_HEAVY)
     s = Server(small_index, embedder, mode="hedra", backend=be, journal_path=p)
@@ -118,8 +116,7 @@ def test_journal_roundtrip_with_midrun_completion(tmp_path, small_index, embedde
     # stop the clock early so some requests complete and some do not
     m = s.run(max_time_us=1.0e6)
     assert 0 < m.finished < 10, "cutoff must leave a mix of done/undone"
-    with open(p) as f:
-        rows = json.load(f)
+    rows = Server.read_journal(p)
     assert len(rows) == 10
     by_id = {r["request_id"]: r for r in rows}
     done_ids = {r.request_id for r in s.sched.done}
