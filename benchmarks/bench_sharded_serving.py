@@ -1,0 +1,109 @@
+"""Shard-mode serving sweep: goodput vs (shards x workers x zipf skew).
+
+The distributed-retrieval serving path (``SchedulerConfig.index_sharding``)
+splits every retrieval sub-stage's probe list by owning cluster-range shard,
+scatters the parts to their owning workers and k-way merges the partial
+top-k sets in the scheduler.  This sweep answers three questions:
+
+* scaling: streamed goodput (finished-under-SLO per second, warmup
+  excluded) of a sharded N-worker pool vs the unsharded pool at the same
+  size, at an offered load near the 4-worker saturation knee;
+* skew sensitivity: ownership is static (contiguous cluster ranges
+  balanced by vector mass), so Zipf-skewed probe traffic concentrates on
+  few shards — the sweep contrasts a mild and a heavy zipf exponent;
+* residency: with a device hot cache attached, per-worker slab residency
+  (``per_owner_resident``) must fall ~N x versus the pool-global slab.
+
+The acceptance bar from the issue: sharded goodput at the knee no worse
+than the unsharded 4-worker baseline (``sharded_serving_nw4_*`` vs
+``sharded_serving_nw4_off_*`` rows).
+
+Standalone: ``python benchmarks/bench_sharded_serving.py --quick
+[--json out.json]`` (the CI smoke job); also runs via
+``benchmarks/run.py --only sharded_serving``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import emit, fixture, make_server  # noqa: E402
+from repro.serving.workload import MIXES  # noqa: E402
+
+# offered load near the 4-worker saturation knee of the retrieval-heavy mix
+KNEE_RATE = 40.0
+MAX_PENDING = 48
+
+
+def _serve_point(index, embedder, *, nw: int, sharding: bool, rate: float,
+                 n: int, hot_cache: int = 0):
+    mix = MIXES["retrieval-heavy"]
+    s = make_server(index, embedder, "hedra", hot_cache=hot_cache,
+                    workload=mix.profile(), num_ret_workers=nw,
+                    index_sharding=sharding, max_pending=MAX_PENDING,
+                    admission_control=True)
+    items = mix.sample(n, rate)
+    m = s.serve(items)
+    warmup = 0.2 * items[-1].arrival_us
+    end = max((f[0] for f in m.finish_log), default=warmup) + 1.0
+    return s, m, m.window_summary(warmup, end)
+
+
+def run(quick: bool = True) -> None:
+    n = 50 if quick else 160
+    zipfs = [1.25] if quick else [1.05, 1.25, 1.5]
+    workers = [1, 2, 4] if quick else [1, 2, 4, 8]
+    for zipf in zipfs:
+        index, embedder = fixture(zipf=zipf)
+        tag = f"zipf{zipf:g}"
+        base = None  # unsharded 4-worker goodput (the PR 4 baseline shape)
+        for nw in workers:
+            for sharding in (False, True):
+                s, m, w = _serve_point(index, embedder, nw=nw,
+                                       sharding=sharding, rate=KNEE_RATE, n=n)
+                mode = "shard" if sharding else "off"
+                if not sharding and nw == 4:
+                    base = w["goodput_rps"]
+                rel = (f"_vs_nw4off={w['goodput_rps'] / base:.2f}x"
+                       if base else "")
+                emit(f"sharded_serving_nw{nw}_{mode}_{tag}",
+                     w["goodput_rps"] * 1e3,
+                     f"goodput_rps={w['goodput_rps']:.2f}"
+                     f"_p95_ms={w['p95_latency_ms']:.1f}"
+                     f"_shed={m.shed}"
+                     f"_scatters={m.shard_scatters}"
+                     f"_parts={m.shard_parts}"
+                     f"_merges={m.shard_merges}{rel}")
+        # per-worker device-slab residency: sharded slabs hold ~1/N each
+        for nw in ([4] if quick else [2, 4, 8]):
+            s, m, w = _serve_point(index, embedder, nw=nw, sharding=True,
+                                   rate=KNEE_RATE, n=n, hot_cache=16)
+            per = s.backend.hybrid.cache.per_owner_resident()
+            emit(f"sharded_residency_nw{nw}_{tag}",
+                 max(per.values()) if per else 0,
+                 f"per_owner={'/'.join(str(per[w2]) for w2 in sorted(per))}"
+                 f"_cap=16_hit={s.backend.hybrid.stats()['hit_rate']:.2f}")
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="",
+                    help="write the emitted rows as a JSON record")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=args.quick)
+    if args.json:
+        from benchmarks import common
+
+        with open(args.json, "w") as f:
+            json.dump({"rows": common.RESULTS}, f, indent=1)
+        print(f"# wrote {args.json} ({len(common.RESULTS)} rows)",
+              file=sys.stderr)

@@ -23,6 +23,7 @@ MODULES = [
     ("concurrent", "benchmarks.bench_concurrent"),    # Fig. 14
     ("multiworker", "benchmarks.bench_multiworker"),  # retrieval-pool scaling
     ("serving", "benchmarks.bench_serving"),          # streaming goodput sweep
+    ("sharded_serving", "benchmarks.bench_sharded_serving"),  # shard-mode scatter-gather
     ("plan", "benchmarks.bench_plan"),                # SoA sub-stage executor
     ("crossreq", "benchmarks.bench_crossreq"),        # cross-request layer
     ("speculation", "benchmarks.bench_speculation"),  # Fig. 17

@@ -149,7 +149,10 @@ class SimBackend:
         seg_sizes = self._sizes[plan.seg_cluster]
         costs = self.cluster_cost_model.cost_vec_us(seg_sizes, plan.seg_counts())
         if self.hybrid is not None:
-            resident = self.hybrid.resident_mask()  # dispatch-time snapshot
+            # dispatch-time snapshot; in shard mode the executing worker
+            # only sees its own slot partition (plus staged replicas)
+            owner = worker_id if self.hybrid.sharded else None
+            resident = self.hybrid.resident_mask(owner)
             dev = resident[plan.seg_cluster]
             host_us = float(costs[~dev].sum())
             dev_us = float(costs[dev].sum()) / self.device_speedup
@@ -178,9 +181,11 @@ class SimBackend:
 
         # --- execute exactly (records accesses, drives cache updates); the
         # snapshot rides in the closure so execution partitions like the charge
-        def results_fn(plan=plan, resident=resident):
+        def results_fn(plan=plan, resident=resident, worker_id=worker_id):
             if self.hybrid is not None:
-                return self.hybrid.search_plan(plan, resident=resident)
+                owner = worker_id if self.hybrid.sharded else None
+                return self.hybrid.search_plan(plan, resident=resident,
+                                               owner=owner)
             return self.index.search_plan(plan)
 
         return charge, results_fn
@@ -250,13 +255,15 @@ class RealBackend:
                     self._sizes[work.cluster_ids], np.ones(work.n_items))
                 # same residency discount as SimBackend so the two report
                 # comparable savings (device-resident clusters are cheap)
-                resident = self.hybrid.resident_mask()
+                resident = self.hybrid.resident_mask(
+                    worker_id if self.hybrid.sharded else None)
                 item_cost = np.where(resident[work.cluster_ids],
                                      item_cost / self.device_speedup,
                                      item_cost)
                 self.fused_saved_us += float((item_cost * extra).sum())
             t0 = time.perf_counter()
-            batch = self.hybrid.search_plan(work)
+            batch = self.hybrid.search_plan(
+                work, owner=worker_id if self.hybrid.sharded else None)
             measured = (time.perf_counter() - t0) * 1e6
             self.worker_busy_us[worker_id] = (
                 self.worker_busy_us.get(worker_id, 0.0) + measured)

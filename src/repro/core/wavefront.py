@@ -36,7 +36,12 @@ from repro.core.speculation import SpeculationPolicy, Speculator
 from repro.core.substage import TimeBudget
 from repro.core import transforms
 from repro.retrieval.ivf import TopK
-from repro.retrieval.plan import PlanBuilder
+from repro.retrieval.plan import (
+    BatchTopK,
+    PlanBuilder,
+    gather_scatter_rows,
+    make_gather_plan,
+)
 from repro.serving import dispatch as dispatch_mod
 
 SPEC_RET_K = 20  # top-k width of speculative LocalCache warmups (paper k')
@@ -82,6 +87,19 @@ class SchedulerConfig:
     max_pending: int = 0
     admission_control: bool = False
     shed_margin: float = 1.0
+    # --- distributed (shard-mode) retrieval: each retrieval worker owns a
+    # contiguous cluster-range shard of the IVF table (retrieval.distributed
+    # .ShardMap, balanced by vector mass); retrieval sub-stages are split by
+    # owning shard into independent scatter tasks and the scheduler k-way
+    # merges the partial top-k sets at completion — bit-identical to the
+    # whole-index fold.  Off by default, in which case dispatch assumes
+    # every worker sees the whole index and the serving path is
+    # bit-identical to the unsharded loop.  shard_merge_us is the
+    # cost-model charge per partial set folded at gather time (admission /
+    # slack estimates model shard-mode service as max-over-shards + merge,
+    # not a sum).
+    index_sharding: bool = False
+    shard_merge_us: float = 40.0
 
     @classmethod
     def preset(cls, mode: str, **kw) -> "SchedulerConfig":
@@ -138,6 +156,10 @@ class Metrics:
     shed_queue_full: int = 0
     shed_infeasible: int = 0
     finish_log: list = dataclasses.field(default_factory=list)
+    # shard-mode scatter-gather counters (all zero with sharding disabled)
+    shard_scatters: int = 0  # sub-stages split across shards
+    shard_parts: int = 0  # partial scan tasks dispatched
+    shard_merges: int = 0  # k-way gather merges completed
 
     @property
     def ret_busy_us(self) -> float:
@@ -252,6 +274,9 @@ class Metrics:
             "dedup_fanout": self.dedup_fanout,
             "dedup_saved_ms": float(self.dedup_saved_us / 1e3),
             "replica_routes": self.replica_routes,
+            "shard_scatters": self.shard_scatters,
+            "shard_parts": self.shard_parts,
+            "shard_merges": self.shard_merges,
             # hybrid-engine counters, surfaced so benches/--json records see
             # them without reaching into the backend
             "cache_hit_rate": float(self.cache_stats.get("hit_rate", 0.0)),
@@ -264,6 +289,23 @@ class Metrics:
             "cache_replicated_clusters": int(
                 self.cache_stats.get("replicated_clusters", 0)),
         }
+
+
+@dataclasses.dataclass
+class _ShardGather:
+    """One in-flight scatter set: a retrieval sub-stage split into per-shard
+    partial scans.  Each completing part writes its item rows into ``board``
+    (original probe order); when the last part lands, ``plan`` — the
+    one-group whole-index replay plan carrying the stage's seed top-k and
+    early-termination streak state — folds the board, so the merged result
+    is bit-identical to a single worker scanning the whole probe list."""
+
+    req: RequestContext
+    sn: object  # runtime-DAG sub-node covering the scatter set
+    clusters: list  # dispatched clusters, in probe (fold) order
+    plan: object  # replay RetrievalPlan (one group)
+    board: BatchTopK  # (n_clusters, plan.k) partial item rows
+    remaining: int  # parts still in flight
 
 
 class WavefrontScheduler:
@@ -297,11 +339,26 @@ class WavefrontScheduler:
                 self.crossreq.attach_cache(
                     hyb.cache, self.num_ret_workers,
                     config.replication_factor)
+        # shard-mode serving (retrieval.distributed.ShardMap): one contiguous
+        # cluster-range shard per retrieval worker; built only when the knob
+        # is on so the disabled path stays bit-identical to the unsharded
+        # loop
+        self.shard_map = None
+        if config.index_sharding:
+            from repro.retrieval.distributed import ShardMap
+
+            self.shard_map = ShardMap.build(
+                index.cluster_sizes(), self.num_ret_workers)
+            hyb = getattr(backend, "hybrid", None)
+            if hyb is not None and not hyb.sharded:
+                hyb.enable_sharding(self.shard_map.owner,
+                                    self.num_ret_workers)
         self.dispatcher = dispatch_mod.RetrievalDispatcher(
             self.num_ret_workers, index.n_clusters,
             policy=config.dispatch_policy,
             tracker=self.crossreq.tracker if self.crossreq else None,
-            replica_map=self.crossreq.replicas if self.crossreq else None)
+            replica_map=self.crossreq.replicas if self.crossreq else None,
+            shard_map=self.shard_map)
         self.metrics = Metrics()
         self.metrics.ret_busy_per_worker = [0.0] * self.num_ret_workers
         # arrival queue: heap keyed (arrival_us, request_id) — O(log n)
@@ -319,7 +376,7 @@ class WavefrontScheduler:
         if config.max_pending > 0 or config.admission_control:
             self.admission = dispatch_mod.AdmissionController(
                 config, self.budget, self.backend.cluster_cost_model,
-                self._cluster_sizes)
+                self._cluster_sizes, shard_map=self.shard_map)
         self._ret_fifo: list[RequestContext] = []  # coarse-mode stage queue
         self._spec_ret_round: dict[int, int] = {}  # req -> last spec-ret round
         # request_id -> (query_vec, cluster queue) precomputed in one batched
@@ -568,10 +625,13 @@ class WavefrontScheduler:
 
     # ------------------------------------------------------ work assembly
     def _slack_order(self, reqs, now: float) -> list:
-        """Wavefront order: tightest SLO slack admitted to assembly first."""
+        """Wavefront order: tightest SLO slack admitted to assembly first.
+        In shard mode remaining-time estimates use the scatter-gather
+        service model (max over shards + merge term)."""
         return dispatch_mod.order_by_slack(
             reqs, now, self.budget, self.backend.cluster_cost_model,
-            self._cluster_sizes, self.cfg.slo_us)
+            self._cluster_sizes, self.cfg.slo_us, self.shard_map,
+            self.cfg.shard_merge_us if self.shard_map is not None else 0.0)
 
     def _assemble_gen(self, now: float):
         """Continuous-batching generation sub-stage across requests."""
@@ -640,6 +700,130 @@ class WavefrontScheduler:
             out_k=out_k,
         )
 
+    # ------------------------------------------------ shard scatter-gather
+    def _scatter_ret(self, builders: dict, cycle_load: dict,
+                     r: RequestContext, idle: list[int], cm,
+                     *, whole_stage: bool) -> None:
+        """Shard-mode dispatch of one request's next retrieval sub-stage:
+        take the Eq.(1) budget prefix of the (reordered) cluster queue (the
+        whole queue for coarse stages), split it by owning shard, and hand
+        each part to its owner — or, for hot clusters replicated onto other
+        workers' slabs, to the least-loaded replica holder.  Parts whose
+        eligible workers are all busy stay queued (order preserved) for a
+        later cycle; the dispatched parts form one ``_ShardGather`` whose
+        completion performs the whole-index k-way merge."""
+        queue = r.ret.cluster_queue
+        if not queue:
+            return
+        if whole_stage:
+            n = len(queue)
+        else:
+            n = self.budget.clusters_for_budget(queue, cm,
+                                                self._cluster_sizes)
+        prefix = queue[:n]
+        assign = []
+        taken = set()
+        for shard, part in self.shard_map.split(prefix):
+            wid = self.dispatcher.pick_shard_worker(part, shard, idle,
+                                                    extra_load=cycle_load)
+            if wid is not None:
+                assign.append((shard, wid, part))
+                taken.add(shard)
+        if not assign:
+            return
+        own = self.shard_map.owner
+        dispatched = [c for c in prefix if int(own[c]) in taken]
+        r.ret.cluster_queue = (
+            [c for c in prefix if int(own[c]) not in taken] + queue[n:])
+        gather = self._new_gather(r, dispatched, len(assign))
+        owners = self.shard_map.owner_of(dispatched)
+        fanout = 1
+        if self.crossreq is not None and self.crossreq.fusion is not None:
+            fanout = self.crossreq.fusion.fanout(r.request_id)
+        for shard, wid, part in assign:
+            positions = np.flatnonzero(owners == shard)
+            builders[wid].add(
+                r.ret.query_vec, part, k=r.ret.topk.k,
+                meta=("shard", gather, positions),
+                fanout=fanout, out_k=gather.board.k)
+            self.dispatcher.note_dispatch(wid, part)
+            cycle_load[wid] = cycle_load.get(wid, 0.0) + cm.batch_cost_us(
+                self._cluster_sizes[np.asarray(part, np.int64)])
+            self.metrics.shard_parts += 1
+        r.ret._inflight = True  # type: ignore[attr-defined]
+        self.metrics.shard_scatters += 1
+
+    def _new_gather(self, r: RequestContext, clusters: list,
+                    n_parts: int) -> _ShardGather:
+        """Open a scatter set: the runtime-DAG sub-node covering it plus the
+        one-group replay plan seeded with the stage's running top-k and
+        early-termination streaks (widened to top-k' when the global cache
+        wants a publishable entry, like the whole-index path)."""
+        sn = self.dag.new_subnode(r, "ret", {"clusters": list(clusters)})
+        out_k = None
+        if (self.crossreq is not None
+                and self.crossreq.global_cache is not None):
+            out_k = max(r.ret.topk.k, SPEC_RET_K)
+        plan = make_gather_plan(
+            r.ret.query_vec, clusters, k=r.ret.topk.k, seed=r.ret.topk,
+            last_kth=r.ret.last_kth, no_improve=r.ret.no_improve,
+            out_k=out_k)
+        return _ShardGather(
+            req=r, sn=sn, clusters=list(clusters), plan=plan,
+            board=BatchTopK.empty(len(clusters), plan.k),
+            remaining=int(n_parts))
+
+    def _finish_gather(self, gather: _ShardGather, now: float) -> None:
+        """All parts of a scatter set have landed: fold the board with the
+        replay plan (k-way merge, bit-identical to the whole-index path) and
+        run the same stage-completion logic the unsharded path runs."""
+        r = gather.req
+        self.metrics.shard_merges += 1
+        if r.finished or r.ret is None:
+            return
+        res = gather.plan.finalize(gather.board)
+        self._apply_ret_result(r, res, 0, int(gather.plan.group_k[0]),
+                               gather.plan.k, gather.clusters, gather.sn, now)
+
+    def _apply_ret_result(self, r: RequestContext, res, g: int, kg: int,
+                          plan_k: int, clusters, sn, now: float) -> None:
+        """Stage-completion core shared by the whole-index path
+        (``_complete_ret``'s ``ret`` groups) and the shard-mode gather: fold
+        group ``g`` of ``res`` into the request's running state, tick the
+        early-termination check, and close the stage when it is done.  Both
+        paths MUST go through here — the shard-mode bit-identity guarantee
+        is exactly that the two run the same completion logic."""
+        r.ret.topk = res.group_topk(g, kg)
+        if (self.crossreq is not None
+                and self.crossreq.global_cache is not None
+                and plan_k > kg):
+            # accumulate the widened top-k' entry for the global cache
+            # across the stage's sub-stages; id dedup keeps the shared
+            # seed prefix from duplicating
+            row = res.group_topk(g, plan_k)
+            prev = getattr(r.ret, "_wide_topk", None)
+            r.ret._wide_topk = (  # type: ignore[attr-defined]
+                row if prev is None
+                else self._merge_unique(prev, row, plan_k))
+        r.ret.no_improve = int(res.no_improve[g])
+        r.ret.last_kth = float(res.last_kth[g])
+        r.ret.searched.extend(clusters)
+        r.ret._inflight = False  # type: ignore[attr-defined]
+        if sn is not None:
+            self.dag.complete(sn)
+        if self.cfg.enable_early_term and not r.ret.done:
+            if transforms.maybe_early_terminate(
+                    self.index, r, mode=self.cfg.early_term_mode,
+                    patience=self.cfg.early_term_patience):
+                self.metrics.early_terms += 1
+        if r.ret.done:
+            self._finish_ret_stage(r, now)
+        elif (self.shard_map is not None and self.cfg.mode != "hedra"
+              and r not in self._ret_fifo):
+            # coarse shard-mode stage with deferred parts (busy owners at
+            # dispatch): back into the stage queue for the next assembly
+            self._ret_fifo.append(r)
+
     def _assemble_ret_substage(self, now: float, idle: list[int]) -> dict:
         builders: dict[int, PlanBuilder] = {w: PlanBuilder() for w in idle}
         # estimated cost handed to each worker *this cycle*; lets the
@@ -654,6 +838,10 @@ class WavefrontScheduler:
         if self.crossreq is not None and self.crossreq.fusion is not None:
             ordered = self._fuse_wavefront(ordered)
         for r in ordered:
+            if self.shard_map is not None:
+                self._scatter_ret(builders, cycle_load, r, idle, cm,
+                                  whole_stage=False)
+                continue
             sn = transforms.split_retrieval_next(
                 self.dag, r, self.budget, cm, self._cluster_sizes,
             )
@@ -669,7 +857,23 @@ class WavefrontScheduler:
                 self._cluster_sizes[np.asarray(clusters, np.int64)])
             self._add_ret_group(builders[wid], r, clusters, sn)
         spec_items = self._maybe_spec_retrieval(now)
-        if spec_items:
+        if spec_items and self.shard_map is not None:
+            # shard mode: a warmup is best effort, and its LocalCache update
+            # is a single *replace* (query, top-k, probed set) — splitting
+            # it across shards would leave only the last-completing part in
+            # the cache.  Dispatch the largest part with a placeable worker
+            # and drop the rest: one consistent (emb, top-k, probed) update.
+            for r, emb, probes in spec_items:
+                parts = sorted(self.shard_map.split(probes),
+                               key=lambda sp: (-len(sp[1]), sp[0]))
+                for shard, part in parts:
+                    wid = self.dispatcher.pick_shard_worker(
+                        part, shard, idle, cycle_load, count_routes=False)
+                    if wid is not None:
+                        builders[wid].add(emb, part, k=SPEC_RET_K,
+                                          meta=("spec", r, emb, part))
+                        break
+        elif spec_items:
             spec_wid = self.dispatcher.least_loaded(idle, extra_load=cycle_load)
             for r, emb, probes in spec_items:
                 builders[spec_wid].add(emb, probes, k=SPEC_RET_K,
@@ -711,6 +915,26 @@ class WavefrontScheduler:
                           if r in self.active and r.ret is not None and not r.ret.done]
         if not self._ret_fifo:
             return {}
+        if self.shard_map is not None:
+            # shard mode: whole stages still scatter by cluster ownership —
+            # a worker cannot scan shards it does not hold.  Requests whose
+            # parts could not all be placed (busy owners) keep their
+            # leftover clusters queued and stay in the stage FIFO.
+            builders: dict[int, PlanBuilder] = {w: PlanBuilder() for w in idle}
+            cycle_load: dict[int, float] = {w: 0.0 for w in idle}
+            cm = self.backend.cluster_cost_model
+            keep = []
+            for r in self._ret_fifo:
+                if getattr(r.ret, "_inflight", False):
+                    keep.append(r)
+                    continue
+                self._scatter_ret(builders, cycle_load, r, idle, cm,
+                                  whole_stage=True)
+                if r.ret.cluster_queue:
+                    keep.append(r)
+            self._ret_fifo = keep
+            return {wid: self._finalize_ret_job(now, wid, builders[wid].build())
+                    for wid in idle if not builders[wid].empty}
         # both coarse baselines dispatch whole stages, one-shot batched over
         # everything queued; 'sequential' additionally holds the global lock
         take = list(self._ret_fifo)
@@ -976,39 +1200,29 @@ class WavefrontScheduler:
     def _complete_ret(self, job, now: float) -> None:
         plan = job["plan"]
         results = job["results_fn"]()  # item-level BatchTopK scoreboard
-        # one vectorized fold: per-group merged top-k + improvement streaks
-        res = plan.finalize(results)
+        # one vectorized fold: per-group merged top-k + improvement streaks.
+        # Shard-mode partials only need the raw item rows (the gather plan
+        # folds them once, at merge time), so an all-shard job skips the fold
+        res = (plan.finalize(results)
+               if any(m[0] != "shard" for m in plan.group_meta) else None)
         for g, meta in enumerate(plan.group_meta):
             kind = meta[0]
             kg = int(plan.group_k[g])
             if kind == "ret":
                 _, r, sn, clusters = meta
-                r.ret.topk = res.group_topk(g, kg)
-                if (self.crossreq is not None
-                        and self.crossreq.global_cache is not None
-                        and plan.k > kg):
-                    # accumulate the widened top-k' entry for the global
-                    # cache across the stage's sub-stages (the scoreboard
-                    # row is plan.k wide thanks to the out_k widening); id
-                    # dedup keeps the shared seed prefix from duplicating
-                    row = res.group_topk(g, plan.k)
-                    prev = getattr(r.ret, "_wide_topk", None)
-                    r.ret._wide_topk = (  # type: ignore[attr-defined]
-                        row if prev is None
-                        else self._merge_unique(prev, row, plan.k))
-                r.ret.no_improve = int(res.no_improve[g])
-                r.ret.last_kth = float(res.last_kth[g])
-                r.ret.searched.extend(clusters)
-                r.ret._inflight = False  # type: ignore[attr-defined]
-                if sn is not None:
-                    self.dag.complete(sn)
-                if self.cfg.enable_early_term and not r.ret.done:
-                    if transforms.maybe_early_terminate(
-                            self.index, r, mode=self.cfg.early_term_mode,
-                            patience=self.cfg.early_term_patience):
-                        self.metrics.early_terms += 1
-                if r.ret.done:
-                    self._finish_ret_stage(r, now)
+                self._apply_ret_result(r, res, g, kg, plan.k, clusters,
+                                       sn, now)
+            elif kind == "shard":
+                # one per-shard partial scan: scatter its item rows into the
+                # gather board (original probe order); the last part to land
+                # triggers the k-way merge
+                _, gather, positions = meta
+                gather_scatter_rows(
+                    gather.board, positions, results,
+                    int(plan.group_start[g]), int(plan.group_start[g + 1]))
+                gather.remaining -= 1
+                if gather.remaining == 0:
+                    self._finish_gather(gather, now)
             else:  # speculative warmup: results land in the LocalCache
                 _, r, emb, probed = meta
                 if r.sim_cache is None:

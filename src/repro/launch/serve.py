@@ -37,6 +37,10 @@ def main() -> None:
     ap.add_argument("--dispatch", default="affinity",
                     choices=["affinity", "least_loaded", "round_robin"],
                     help="retrieval sub-stage placement policy")
+    ap.add_argument("--index-sharding", action="store_true",
+                    help="distributed IVF retrieval: each worker owns a "
+                         "contiguous cluster-range shard; sub-stages "
+                         "scatter-gather across the pool")
     args = ap.parse_args()
 
     docs, _, topics = make_corpus(CorpusConfig(n_docs=8000, dim=48, n_topics=64))
@@ -63,7 +67,8 @@ def main() -> None:
     backend.gen_duration = gen_duration
     server = Server(index, embedder, mode="hedra", backend=backend, nprobe=8,
                     num_ret_workers=args.ret_workers,
-                    dispatch_policy=args.dispatch)
+                    dispatch_policy=args.dispatch,
+                    index_sharding=args.index_sharding)
     for i in range(args.n_requests):
         server.add_request(f"query {i}", workflows.build(args.workflow),
                            arrival_us=i * 20_000.0)

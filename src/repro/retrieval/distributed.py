@@ -15,15 +15,109 @@ until the merge latency floor (~2 * link latency).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional
+from typing import Iterable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 f32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Cluster -> shard ownership (the serving-path side of distribution)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ShardMap:
+    """Cluster-ownership table for shard-mode serving.
+
+    Each retrieval worker owns one shard of the IVF cluster table; in the
+    canonical layout (``build``) shards are *contiguous cluster ranges*
+    balanced by vector mass, mirroring how ``make_sharded_search`` splits
+    the device slab over the mesh ``data`` axis (chip ``i`` owns tile range
+    ``[bounds[i], bounds[i+1])``).  ``from_owner`` accepts an arbitrary
+    cluster->shard assignment (property tests, externally planned layouts).
+
+    The scheduler uses ``split`` to scatter a sub-stage's probe list into
+    per-shard partial scans and the dispatcher uses ``owner``/``bounds`` for
+    placement; hot clusters may additionally be served by crossreq replica
+    holders (see ``RetrievalDispatcher.pick_shard_worker``).
+    """
+
+    owner: np.ndarray  # (n_clusters,) i64 owning shard per cluster
+    bounds: Optional[np.ndarray] = None  # (n_shards+1,) for contiguous maps
+    n_shards: int = 0
+
+    def __post_init__(self):
+        self.owner = np.asarray(self.owner, np.int64)
+        if self.n_shards <= 0:
+            self.n_shards = int(self.owner.max()) + 1 if self.owner.size else 1
+
+    @property
+    def n_clusters(self) -> int:
+        return int(self.owner.shape[0])
+
+    @classmethod
+    def build(cls, cluster_sizes: Sequence[int], n_shards: int) -> "ShardMap":
+        """Contiguous cluster-range shards balanced by vector mass: shard
+        boundaries are placed on the size prefix sum so each worker scans
+        ~1/N of the corpus, not 1/N of the (skew-sized) clusters."""
+        sizes = np.asarray(cluster_sizes, np.float64)
+        n_shards = max(1, int(n_shards))
+        n_clusters = sizes.shape[0]
+        if n_shards >= n_clusters:
+            owner = np.arange(n_clusters, dtype=np.int64)
+            bounds = np.arange(n_clusters + 1, dtype=np.int64)
+            return cls(owner=owner, bounds=bounds, n_shards=max(n_clusters, 1))
+        prefix = np.cumsum(sizes)
+        total = prefix[-1] if prefix.size else 0.0
+        cuts = [0]
+        for j in range(1, n_shards):
+            c = int(np.searchsorted(prefix, j * total / n_shards,
+                                    side="right"))
+            cuts.append(min(max(c, cuts[-1] + 1), n_clusters - (n_shards - j)))
+        cuts.append(n_clusters)
+        bounds = np.asarray(cuts, np.int64)
+        owner = np.zeros(n_clusters, np.int64)
+        for s in range(n_shards):
+            owner[bounds[s]: bounds[s + 1]] = s
+        return cls(owner=owner, bounds=bounds, n_shards=n_shards)
+
+    @classmethod
+    def from_owner(cls, owner: Sequence[int],
+                   n_shards: Optional[int] = None) -> "ShardMap":
+        """Arbitrary (not necessarily contiguous) cluster->shard assignment."""
+        arr = np.asarray(owner, np.int64)
+        return cls(owner=arr,
+                   n_shards=int(n_shards) if n_shards else 0)
+
+    def owner_of(self, clusters: Iterable[int]) -> np.ndarray:
+        return self.owner[np.asarray(list(clusters), np.int64)]
+
+    def split(self, clusters: Sequence[int]) -> list[tuple[int, list[int]]]:
+        """Scatter a probe list by owning shard: ``[(shard, [cid, ...]),
+        ...]`` ascending by shard id, order of clusters preserved within
+        each part.  Empty shards are omitted."""
+        cl = list(clusters)
+        if not cl:
+            return []
+        own = self.owner[np.asarray(cl, np.int64)]
+        parts: dict[int, list[int]] = {}
+        for cid, o in zip(cl, own):
+            parts.setdefault(int(o), []).append(int(cid))
+        return sorted(parts.items())
+
+    def shard_sizes(self, cluster_sizes: Sequence[int]) -> np.ndarray:
+        """Vector mass per shard (diagnostics / balance reporting)."""
+        sizes = np.asarray(cluster_sizes, np.float64)
+        return np.bincount(self.owner, weights=sizes,
+                           minlength=self.n_shards)
 
 
 def _local_scan_topk(q: jax.Array, slab: jax.Array, valid: jax.Array,
@@ -82,3 +176,58 @@ def make_sharded_search(mesh: Mesh, k: int, axis: str = "data"):
 def reference_search(q, slab, valid, k):
     """Single-device oracle over the full slab (for tests)."""
     return _local_scan_topk(q, slab, valid, jnp.int32(0), k)
+
+
+def scatter_gather_search(
+    index, q: np.ndarray, nprobe: int, k: int, shard_map: ShardMap
+) -> tuple[np.ndarray, np.ndarray]:
+    """Whole-index IVF search through the serving scatter-gather path.
+
+    The probe list of each query is split by owning shard
+    (``ShardMap.split``), each part is scanned as an independent partial
+    plan (what a shard worker executes), the partial item rows are scattered
+    back into one gather scoreboard in original probe order, and the gather
+    plan's ``finalize`` performs the k-way merge.  Bit-identical to
+    ``plan_search``/``IVFIndex.search`` — the serving-path analogue of
+    ``make_sharded_search``'s all-gather + top-k reduction, on the host.
+    Returns ``(dists (Q, k), ids (Q, k))``.
+    """
+    from repro.retrieval.plan import (
+        BatchTopK, PlanBuilder, gather_scatter_rows, make_gather_plan,
+    )
+
+    q2 = np.atleast_2d(np.asarray(q, np.float32))
+    probes = index.probe_order(q2, nprobe)
+    Q = q2.shape[0]
+    clusters = [[int(c) for c in probes[r]] for r in range(Q)]
+    owners = [shard_map.owner_of(cl) for cl in clusters]
+    gathers = [make_gather_plan(q2[r], clusters[r], k=k) for r in range(Q)]
+    boards = [BatchTopK.empty(len(clusters[r]), gathers[r].k)
+              for r in range(Q)]
+    # one partial plan per shard, spanning *all* queries probing it — a
+    # cluster belongs to exactly one shard, so each cluster block is scanned
+    # against exactly the query set the whole-index plan would batch it with
+    # (same segment table, same GEMM shapes, bit-identical item rows)
+    for shard in range(shard_map.n_shards):
+        pb = PlanBuilder()
+        members = []  # (query, positions into its board)
+        for r in range(Q):
+            pos = np.flatnonzero(owners[r] == shard)
+            if pos.size == 0:
+                continue
+            pb.add(q2[r], [clusters[r][int(p)] for p in pos], k=k)
+            members.append((r, pos))
+        if pb.empty:
+            continue
+        partial = pb.build()
+        rows = index.search_plan(partial)
+        for g, (r, pos) in enumerate(members):
+            gather_scatter_rows(boards[r], pos, rows,
+                                int(partial.group_start[g]),
+                                int(partial.group_start[g + 1]))
+    D = np.zeros((Q, k), np.float32)
+    I = np.zeros((Q, k), np.int64)
+    for r in range(Q):
+        res = gathers[r].finalize(boards[r])
+        D[r], I[r] = res.dists[0, :k], res.ids[0, :k]
+    return D, I

@@ -131,6 +131,12 @@ class HotClusterCache:
         # ticked by its owner (the scheduler), never by this cache
         self.shared_tracker = shared_tracker
         self.stats = CacheStats()
+        # shard-mode ownership (set via set_shard_owner before any staging):
+        # cluster ``c``'s primary copy may only be staged into a slot owned
+        # by worker ``shard_owner[c]`` — each worker's slab partition holds
+        # only its own shard (plus replicated hot clusters), which is what
+        # cuts per-worker residency ~N x under index sharding
+        self.shard_owner: Optional[np.ndarray] = None
         self._resident: dict[int, int] = {}  # cid -> primary slot
         self._replica_slots: dict[int, list[int]] = {}  # cid -> all slots
         self._transit: dict[int, int] = {}  # cid -> substages remaining
@@ -140,6 +146,17 @@ class HotClusterCache:
         self._refused: set[int] = set()  # loader-refused (e.g. oversized)
         self._free_slots = list(range(self.capacity))
         self._substage = 0
+
+    def set_shard_owner(self, owner: np.ndarray, num_owners: int) -> None:
+        """Enable shard-mode slot ownership: primary copies are constrained
+        to their owning worker's slot partition.  Must be configured before
+        any cluster is staged — re-partitioning a populated slab would
+        silently orphan resident tiles."""
+        if self._resident:
+            raise RuntimeError(
+                "set_shard_owner must be called before any cluster is staged")
+        self.shard_owner = np.asarray(owner, np.int64)
+        self.num_owners = max(1, int(num_owners))
 
     # ------------------------------------------------------------------ query
     def is_resident(self, cid: int) -> bool:
@@ -161,16 +178,20 @@ class HotClusterCache:
         self.stats.misses += 1
         return False
 
-    def lookup_batch(self, cids: np.ndarray) -> np.ndarray:
+    def lookup_batch(self, cids: np.ndarray,
+                     owner: Optional[int] = None) -> np.ndarray:
         """Vectorized ``lookup``: record all accesses at once and return a
         per-item residency bool (False -> host path).  Equivalent to calling
-        ``lookup`` per item, without the Python loop over the tracker."""
+        ``lookup`` per item, without the Python loop over the tracker.
+        ``owner`` (shard mode) counts hits against the executing worker's
+        slot partition — a cluster resident only on another worker's slab
+        is a miss for this worker, matching the executed partition."""
         ids = np.asarray(cids, np.int64)
         self.tracker.record(ids)
         if not self._resident and not self._transit:
             self.stats.misses += int(ids.size)
             return np.zeros(ids.shape, bool)
-        mask = self.resident_mask()
+        mask = self.resident_mask(owner)
         res = mask[ids]
         transit = np.isin(ids, np.fromiter(self._transit, np.int64))
         self.stats.transit_blocked += int(transit.sum())
@@ -178,41 +199,74 @@ class HotClusterCache:
         self.stats.misses += int(ids.size - res.sum())
         return res
 
-    def resident_mask(self) -> np.ndarray:
+    def resident_mask(self, owner: Optional[int] = None) -> np.ndarray:
         """Snapshot of device residency as a bool array over all clusters.
         Taken at sub-stage *assembly* time by the backends so that the
         charged duration and the executed host/device partition agree even
-        when swaps land in between (see SimBackend.search_charged)."""
+        when swaps land in between (see SimBackend.search_charged).
+
+        With ``owner`` given (shard mode), a cluster counts as resident only
+        when a *visible* staged copy lives on that worker's slot partition —
+        workers see their own shard (plus replicated hot clusters), not the
+        pool-global slab."""
         mask = np.zeros(self.tracker.freq.shape[0], bool)
-        for cid in self._resident:
-            if cid not in self._transit:
+        if owner is None:
+            for cid in self._resident:
+                if cid not in self._transit:
+                    mask[cid] = True
+            return mask
+        for cid in self._replica_slots:
+            if any(s % self.num_owners == owner
+                   for s in self._visible_slots(cid)):
                 mask[cid] = True
         return mask
+
+    def slot_on_owner(self, cid: int, owner: int) -> Optional[int]:
+        """Visible staged slot of ``cid`` on worker ``owner``'s partition,
+        or None — shard-mode slot resolution for the device scan path."""
+        for s in self._visible_slots(cid):
+            if s % self.num_owners == owner:
+                return s
+        return None
+
+    def per_owner_resident(self) -> dict[int, int]:
+        """Visible staged copies per owner worker — the per-worker device
+        residency figure the shard-mode benchmarks/tests report."""
+        out = {w: 0 for w in range(self.num_owners)}
+        for cid in self._replica_slots:
+            for s in self._visible_slots(cid):
+                out[s % self.num_owners] += 1
+        return out
 
     @property
     def resident_ids(self) -> list[int]:
         return [c for c in self._resident if c not in self._transit]
 
+    def _visible_slots(self, cid: int) -> list[int]:
+        """Visible staged slots of ``cid`` (primary first): none while the
+        primary load is in transit, and individual replica copies in slot
+        transit are excluded.  The single home of the visibility rule —
+        every residency/routing accessor builds on it."""
+        if cid in self._transit:
+            return []
+        return [s for s in self._replica_slots.get(cid, ())
+                if s not in self._slot_transit]
+
     def replica_slots(self) -> dict[int, list[int]]:
         """cid -> *visible* staged slots (primary first).  Clusters whose
         primary load is still in transit, and individual replica copies in
-        slot transit, are excluded — visibility semantics live here, not in
-        the callers."""
+        slot transit, are excluded — visibility semantics live in
+        ``_visible_slots``, not in the callers."""
         return {
-            cid: [s for s in slots if s not in self._slot_transit]
-            for cid, slots in self._replica_slots.items()
+            cid: self._visible_slots(cid)
+            for cid in self._replica_slots
             if cid not in self._transit
         }
 
     def replica_owners(self, cid: int) -> list[int]:
         """Distinct owner workers holding a *visible* copy of ``cid``."""
-        if cid in self._transit:
-            return []
-        slots = self._replica_slots.get(cid)
-        if not slots:
-            return []
-        return sorted({s % self.num_owners for s in slots
-                       if s not in self._slot_transit})
+        return sorted({s % self.num_owners
+                       for s in self._visible_slots(cid)})
 
     @property
     def replicated_ids(self) -> list[int]:
@@ -274,6 +328,14 @@ class HotClusterCache:
                 return None
         return self._free_slots.pop()
 
+    def _take_owner_slot(self, owner: int) -> Optional[int]:
+        """Pop a free slot on exactly ``owner``'s partition (shard-mode
+        primary staging), or None when that worker's slots are full."""
+        for i in range(len(self._free_slots) - 1, -1, -1):
+            if self._free_slots[i] % self.num_owners == owner:
+                return self._free_slots.pop(i)
+        return None
+
     def _refresh(self) -> None:
         self.stats.updates += 1
         # refused clusters (e.g. oversized for the device tile) are excluded
@@ -309,9 +371,16 @@ class HotClusterCache:
                 if not self._free_slots:
                     return
                 owners = {s % self.num_owners for s in slots}
-                slot = self._take_slot(owners, require_distinct=bool(slots))
+                if self.shard_owner is not None and not slots:
+                    # shard mode: the primary copy must live on the owning
+                    # worker's slot partition; a full partition keeps the
+                    # cluster host-side this round (other shards' slots
+                    # stay available to their own clusters)
+                    slot = self._take_owner_slot(int(self.shard_owner[cid]))
+                else:
+                    slot = self._take_slot(owners, require_distinct=bool(slots))
                 if slot is None:
-                    break  # no distinct-owner slot free: skip the copy
+                    break  # no eligible slot free: skip the copy
                 if self.loader is not None and self.loader(cid, slot) is False:
                     # loader refused: release the slot, remember the refusal,
                     # keep the cluster on the host path permanently

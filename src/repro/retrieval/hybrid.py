@@ -92,6 +92,19 @@ class HybridRetrievalEngine:
         self._qbuf = np.zeros((0, QB, index.dim), np.float32)  # persistent
         self.upload_stats = {"full": 0, "delta": 0, "delta_slots": 0}
 
+    # ----------------------------------------------------------- shard mode
+    def enable_sharding(self, shard_owner, num_owners: int) -> None:
+        """Partition the device slab by cluster ownership: worker ``w`` owns
+        slots ``s`` with ``s % num_owners == w`` and only its shard's
+        clusters (plus crossreq hot-cluster replicas) are staged there, so
+        each worker's resident set shrinks ~``num_owners`` x versus the
+        pool-global slab.  Must run before any cluster is staged."""
+        self.cache.set_shard_owner(shard_owner, num_owners)
+
+    @property
+    def sharded(self) -> bool:
+        return self.cache.shard_owner is not None
+
     # ------------------------------------------------------------- cache load
     def _load_cluster(self, cid: int, slot: int) -> bool:
         """Stage cluster ``cid`` into slab ``slot``; refuse oversized ones.
@@ -141,6 +154,7 @@ class HybridRetrievalEngine:
         *,
         resident: Optional[np.ndarray] = None,
         timing: Optional[SubstageTiming] = None,
+        owner: Optional[int] = None,
     ) -> BatchTopK:
         """Execute one plan: device path for resident-cluster segments, host
         path for the rest, both merging into the item scoreboard.
@@ -151,23 +165,34 @@ class HybridRetrievalEngine:
         between.  Segments whose snapshot said device but whose cluster has
         since been swapped out fall back to the host path (counted in
         ``cache.stats.stale_fallbacks``).
+
+        ``owner`` (shard mode) restricts the device path to the executing
+        worker's slot partition: slot resolution goes through
+        ``cache.slot_on_owner`` so a cluster resident only on *another*
+        worker's slab takes this worker's host path.
         """
         out = BatchTopK.empty(plan.n_items, plan.k)
-        cur = self.cache.lookup_batch(plan.cluster_ids)  # records accesses
+        # records accesses; hit/miss stats and live residency are both
+        # owner-filtered in shard mode, matching the executed partition
+        cur = self.cache.lookup_batch(plan.cluster_ids, owner=owner)
         if resident is None:
             # per-segment residency from the per-item lookup (items of a
-            # segment share one cluster, so its first item is representative)
+            # segment share one cluster, so its first is representative)
             seg_dev = cur[plan.seg_order[plan.seg_bounds[:-1]]]
         else:
             seg_dev = resident[plan.seg_cluster]
         host_segs: list[int] = []
         dev_segs: list[int] = []
+        dev_slots: dict[int, int] = {}
         for s in range(plan.n_segments):
             if not seg_dev[s]:
                 host_segs.append(s)
                 continue
             cid = int(plan.seg_cluster[s])
-            slot = self.cache._resident.get(cid)
+            if owner is None:
+                slot = self.cache._resident.get(cid)
+            else:
+                slot = self.cache.slot_on_owner(cid, owner)
             if slot is None or self._slot_cid[slot] != cid:
                 # swapped out between dispatch and execution
                 self.cache.stats.stale_fallbacks += int(
@@ -175,10 +200,11 @@ class HybridRetrievalEngine:
                 host_segs.append(s)
             else:
                 dev_segs.append(s)
+                dev_slots[s] = int(slot)
 
         if dev_segs:
             t0 = time.perf_counter()
-            n_dev = self._device_scan(plan, dev_segs, out)
+            n_dev = self._device_scan(plan, dev_segs, out, dev_slots)
             if timing is not None:
                 timing.device_us = (time.perf_counter() - t0) * 1e6
                 timing.n_device_items = n_dev
@@ -217,9 +243,12 @@ class HybridRetrievalEngine:
             self._qbuf = np.zeros((cap, QB, self.index.dim), np.float32)
         return self._qbuf
 
-    def _device_scan(self, plan: RetrievalPlan, dev_segs, out: BatchTopK) -> int:
+    def _device_scan(self, plan: RetrievalPlan, dev_segs, out: BatchTopK,
+                     dev_slots: Optional[dict] = None) -> int:
         """Pack resident segments into (G, QB, d) groups + fused scan, then
-        one vectorized scatter-merge of all member rows."""
+        one vectorized scatter-merge of all member rows.  ``dev_slots``
+        (shard mode) carries the per-segment slot resolved on the executing
+        worker's partition; without it the primary slot is used."""
         from repro.kernels.ivf_scan import ivf_scan
 
         jnp = self._jnp
@@ -228,7 +257,10 @@ class HybridRetrievalEngine:
         g_slots: list[int] = []
         g_rows: list[np.ndarray] = []
         for s in dev_segs:
-            slot = int(self.cache.slot_of(int(plan.seg_cluster[s])))
+            if dev_slots is not None and s in dev_slots:
+                slot = dev_slots[s]
+            else:
+                slot = int(self.cache.slot_of(int(plan.seg_cluster[s])))
             rows = plan.segment_rows(s)
             for ofs in range(0, rows.size, QB):
                 g_slots.append(slot)
@@ -258,16 +290,21 @@ class HybridRetrievalEngine:
         return int(rows_flat.size)
 
     # ---------------------------------------------------------------- stats
-    def resident_mask(self) -> np.ndarray:
-        """Residency snapshot for dispatch-time charging (bool per cluster)."""
-        return self.cache.resident_mask()
+    def resident_mask(self, owner: Optional[int] = None) -> np.ndarray:
+        """Residency snapshot for dispatch-time charging (bool per cluster);
+        ``owner`` restricts it to one worker's slot partition (shard mode)."""
+        return self.cache.resident_mask(owner)
 
     def replica_owners(self, cid: int) -> list[int]:
         """Workers holding a staged replica of ``cid`` (crossreq routing)."""
         return self.cache.replica_owners(cid)
 
     def stats(self) -> dict:
+        per_owner = (self.cache.per_owner_resident()
+                     if self.cache.num_owners > 1 else {})
         return {
+            "sharded": self.sharded,
+            "per_owner_resident": per_owner,
             "hit_rate": self.cache.stats.hit_rate,
             "hits": self.cache.stats.hits,
             "misses": self.cache.stats.misses,

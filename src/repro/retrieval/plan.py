@@ -355,6 +355,56 @@ class PlanBuilder:
 
 
 # ---------------------------------------------------------------------------
+# Scatter-gather (shard-mode serving): partial-scan reassembly
+# ---------------------------------------------------------------------------
+
+
+def make_gather_plan(
+    query: np.ndarray,
+    clusters: Sequence[int],
+    *,
+    k: int,
+    seed: Optional[TopK] = None,
+    last_kth: float = np.inf,
+    no_improve: int = 0,
+    out_k: Optional[int] = None,
+) -> RetrievalPlan:
+    """One-group replay plan for a scatter-gather merge.
+
+    Shard-mode serving splits a sub-stage's probe list into per-shard
+    partial scans; each partial returns *item-level* rows (one per
+    (query, cluster) probe, exactly what the whole-index path would have
+    computed for those items).  The gather step scatters those rows back
+    into a single scoreboard ordered like the original probe list and folds
+    it with this plan's ``finalize`` — the same seed/streak fold the
+    whole-index path runs, so the k-way merged result (top-k, ``no_improve``
+    streak, ``last_kth``) is bit-identical to a single worker scanning the
+    whole probe list.
+    """
+    b = PlanBuilder()
+    b.add(query, clusters, k=int(k), seed=seed, last_kth=last_kth,
+          no_improve=no_improve, out_k=out_k)
+    return b.build()
+
+
+def gather_scatter_rows(
+    scoreboard: BatchTopK,
+    positions: np.ndarray,
+    results: BatchTopK,
+    start: int,
+    stop: int,
+) -> None:
+    """Copy one partial scan's item rows ``results[start:stop]`` into the
+    gather ``scoreboard`` at ``positions`` (the items' indices in the
+    original probe-list order).  Rows are ascending +inf/-1 padded, so
+    trimming a wider executing plan's rows to the gather width keeps
+    exactly the top candidates the narrower whole-index row would hold."""
+    gk = scoreboard.k
+    scoreboard.dists[positions] = results.dists[start:stop, :gk]
+    scoreboard.ids[positions] = results.ids[start:stop, :gk]
+
+
+# ---------------------------------------------------------------------------
 # Convenience: plan-based full search (reference-equivalent)
 # ---------------------------------------------------------------------------
 

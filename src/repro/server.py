@@ -156,6 +156,28 @@ class Server:
             return {}
         return self.sched.crossreq.report()
 
+    def shard_report(self) -> dict:
+        """Shard-mode serving state (empty when ``index_sharding`` is off):
+        the cluster-range ownership table, scatter/merge counters, and —
+        when a hybrid engine is attached — per-worker device-slab
+        residency."""
+        sm = self.sched.shard_map
+        if sm is None:
+            return {}
+        out = {
+            "n_shards": sm.n_shards,
+            "bounds": (sm.bounds.tolist() if sm.bounds is not None else None),
+            "shard_vectors": sm.shard_sizes(
+                self.index.cluster_sizes()).tolist(),
+            "shard_scatters": self.sched.metrics.shard_scatters,
+            "shard_parts": self.sched.metrics.shard_parts,
+            "shard_merges": self.sched.metrics.shard_merges,
+        }
+        hyb = getattr(self.backend, "hybrid", None)
+        if hyb is not None:
+            out["per_owner_resident"] = hyb.cache.per_owner_resident()
+        return out
+
     # ------------------------------------------------------- fault tolerance
     def write_journal(self, path: str) -> None:
         """Request journal: enough to replay / resume after a crash.
@@ -209,3 +231,22 @@ class Server:
     def replay_unfinished(path: str) -> list[dict]:
         """Requests that must be re-admitted after restart."""
         return [r for r in Server.read_journal(path) if not r["finished"]]
+
+    def readmit(self, rows: Iterable[dict]) -> list[Optional[int]]:
+        """Re-admit journal rows (``replay_unfinished`` output) into this —
+        possibly warm, possibly shard-mode — server: each row's workflow is
+        rebuilt by name and re-queued at the later of its journaled arrival
+        and the current event clock (the virtual clock cannot honor a stamp
+        in its past).  Routing state (shard map, dispatcher, caches) is the
+        live server's own, so recovered requests dispatch exactly like
+        fresh ones.  Returns one new request id per row (``None`` where an
+        enabled admission knob sheds the recovered request)."""
+        from repro import workflows
+
+        ids: list[Optional[int]] = []
+        for row in rows:
+            graph = workflows.build(row["graph"])
+            arrival = max(float(row.get("arrival_us", 0.0)), self.sched.now)
+            ids.append(self.add_request(row.get("input") or "",
+                                        graph, arrival_us=arrival))
+        return ids

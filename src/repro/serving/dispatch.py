@@ -62,7 +62,7 @@ class RetrievalDispatcher:
 
     def __init__(self, num_workers: int, n_clusters: int, *,
                  policy: str = "affinity", decay: float = 0.95,
-                 tracker=None, replica_map=None):
+                 tracker=None, replica_map=None, shard_map=None):
         if policy not in DISPATCH_POLICIES:
             raise ValueError(
                 f"unknown dispatch policy {policy!r}; choose from {DISPATCH_POLICIES}")
@@ -75,6 +75,11 @@ class RetrievalDispatcher:
         self.tracker = tracker
         self.replica_map = replica_map
         self.replica_routes = 0
+        # shard-mode ownership table (retrieval.distributed.ShardMap): set
+        # when the serving path runs distributed IVF retrieval — placement
+        # becomes ownership-constrained (pick_shard_worker) instead of
+        # policy-driven
+        self.shard_map = shard_map
         self.workers = [
             WorkerState(w, np.zeros(n_clusters, np.float64))
             for w in range(self.num_workers)
@@ -124,6 +129,41 @@ class RetrievalDispatcher:
                     self.replica_routes += 1
                 return pick
         return aff
+
+    def pick_shard_worker(self, clusters: Sequence[int], owner: int,
+                          candidates: Sequence[int],
+                          extra_load: Optional[dict] = None,
+                          count_routes: bool = True) -> Optional[int]:
+        """Placement for one shard-mode partial scan: the part's clusters all
+        belong to shard ``owner``, so the owning worker is the default
+        target.  Hot clusters replicated onto other workers' device slabs
+        (crossreq ``ReplicaMap``) widen the choice: a worker holding a
+        visible replica of *every* cluster in the part can serve it too, and
+        the least-loaded eligible holder wins (counted in
+        ``replica_routes`` when the choice deviates from the owner;
+        best-effort placements like speculative warmups pass
+        ``count_routes=False`` so throwaway parts don't inflate the
+        metric).  Returns ``None`` when neither the owner nor any
+        full-coverage replica holder is among ``candidates`` (idle
+        workers) — the part stays queued for a later cycle."""
+        cands = [owner] if owner in candidates else []
+        if self.replica_map is not None and clusters:
+            common: Optional[set] = None
+            for c in clusters:
+                held = self.replica_map.owners(int(c))
+                cover = set(held) if held else set()
+                common = cover if common is None else (common & cover)
+                if not common:
+                    break
+            if common:
+                cands += [w for w in sorted(common)
+                          if w in candidates and w != owner]
+        if not cands:
+            return None
+        pick = self.least_loaded(cands, extra_load)
+        if pick != owner and count_routes:
+            self.replica_routes += 1
+        return pick
 
     def _affinity_pick(self, clusters: Iterable[int],
                        candidates: Sequence[int],
@@ -176,15 +216,42 @@ class RetrievalDispatcher:
 # ---------------------------------------------------------------------------
 
 
-def estimate_remaining_us(req, budget, cost_model, sizes) -> float:
+def sharded_scan_cost_us(clusters: np.ndarray, cost_model, sizes,
+                         shard_map, merge_us: float) -> float:
+    """Service-time estimate of scanning ``clusters`` in shard mode: the
+    per-shard partial scans run in *parallel* on their owning workers, so
+    the scan term is the ``max`` over shards (not the sum), plus a k-way
+    merge term per participating shard charged to the scheduler-side
+    gather."""
+    if clusters.size == 0:
+        return 0.0
+    owners = shard_map.owner[clusters]
+    per_cost = cost_model.cost_vec_us(sizes[clusters],
+                                      np.ones(clusters.size))
+    per_shard = np.bincount(owners, weights=per_cost,
+                            minlength=shard_map.n_shards)
+    n_parts = int((np.bincount(owners,
+                               minlength=shard_map.n_shards) > 0).sum())
+    return float(per_shard.max()) + merge_us * n_parts
+
+
+def estimate_remaining_us(req, budget, cost_model, sizes,
+                          shard_map=None, merge_us: float = 0.0) -> float:
     """First-order estimate of a request's remaining service time: the cost
     of its unsearched clusters plus its ungenerated tokens at the current
     EMA decode rate.  Later stages of the workflow are not modelled — slack
-    is used for *ordering*, so only relative magnitudes matter."""
+    is used for *ordering*, so only relative magnitudes matter.  With a
+    ``shard_map``, the retrieval term models shard-mode scatter-gather:
+    ``max`` over per-shard partial-scan costs plus a merge term, instead of
+    the single-worker sum."""
     est = 0.0
     if req.ret is not None and not req.ret.done and req.ret.cluster_queue:
         queued = np.asarray(req.ret.cluster_queue, np.int64)
-        est += cost_model.batch_cost_us(sizes[queued])
+        if shard_map is None:
+            est += cost_model.batch_cost_us(sizes[queued])
+        else:
+            est += sharded_scan_cost_us(queued, cost_model, sizes,
+                                        shard_map, merge_us)
     if req.gen is not None and not req.gen.done:
         remaining = max(req.gen.target_tokens - req.gen.generated, 0)
         est += remaining * budget.t_decode_step_us
@@ -192,21 +259,24 @@ def estimate_remaining_us(req, budget, cost_model, sizes) -> float:
 
 
 def slo_slack_us(req, now: float, budget, cost_model, sizes,
-                 default_slo_us: float) -> float:
+                 default_slo_us: float, shard_map=None,
+                 merge_us: float = 0.0) -> float:
     """deadline - now - estimated_remaining; negative -> already late."""
     slo = getattr(req, "slo_us", 0.0) or default_slo_us
     deadline = req.arrival_us + slo
-    return deadline - now - estimate_remaining_us(req, budget, cost_model, sizes)
+    return deadline - now - estimate_remaining_us(req, budget, cost_model,
+                                                  sizes, shard_map, merge_us)
 
 
 def order_by_slack(reqs, now: float, budget, cost_model, sizes,
-                   default_slo_us: float) -> list:
+                   default_slo_us: float, shard_map=None,
+                   merge_us: float = 0.0) -> list:
     """Wavefront order for sub-stage assembly: tightest slack first (ties
     broken by arrival so the order is deterministic)."""
     return sorted(
         reqs,
         key=lambda r: (slo_slack_us(r, now, budget, cost_model, sizes,
-                                    default_slo_us),
+                                    default_slo_us, shard_map, merge_us),
                        r.arrival_us, r.request_id),
     )
 
@@ -251,31 +321,48 @@ class AdmissionController:
     shed set on every run.
     """
 
-    def __init__(self, cfg, budget, cost_model, cluster_sizes):
+    def __init__(self, cfg, budget, cost_model, cluster_sizes,
+                 shard_map=None):
         self.cfg = cfg
         self.budget = budget
         self.cost_model = cost_model
         self.sizes = np.asarray(cluster_sizes)
         self.min_cluster_size = int(self.sizes.min()) if self.sizes.size else 0
+        # shard-mode cost semantics: a retrieval stage's service time is the
+        # max over its per-shard partial scans plus a scheduler-side merge
+        # term, not a single-worker sum over its clusters
+        self.shard_map = shard_map
+        self.merge_us = float(getattr(cfg, "shard_merge_us", 0.0)
+                              ) if shard_map is not None else 0.0
 
     def lower_bound_us(self, req) -> float:
         """Cost-model lower bound of serving ``req`` in isolation: one
         smallest-cluster scan per retrieval node + one decode step per
-        generation node (at the current EMA step cost), single pass."""
+        generation node (at the current EMA step cost), single pass.  In
+        shard mode sharding cannot shrink a single smallest-cluster scan
+        (``max`` over one shard == that shard), but every retrieval stage
+        additionally pays at least one scatter-gather merge."""
         n_ret = sum(1 for n in req.graph.nodes.values()
                     if n.kind == "retrieval")
         n_gen = sum(1 for n in req.graph.nodes.values()
                     if n.kind == "generation")
-        return (n_ret * self.cost_model.cost_us(self.min_cluster_size)
+        return (n_ret * (self.cost_model.cost_us(self.min_cluster_size)
+                         + self.merge_us)
                 + n_gen * self.budget.t_decode_step_us)
 
     def backlog_us(self, active) -> float:
         """Queueing-delay lower bound seen by a new arrival: the first-order
-        remaining service time of everything in flight, spread over the
-        retrieval worker pool."""
+        remaining service time of everything in flight.  Whole-index mode
+        spreads independent stages over the retrieval pool (``/ N``); shard
+        mode does *not* divide — each request's estimate is already the
+        parallel (max-over-shards) service time and scatter sets occupy the
+        whole pool at once, so in-flight requests queue behind each other."""
         total = sum(
-            estimate_remaining_us(r, self.budget, self.cost_model, self.sizes)
+            estimate_remaining_us(r, self.budget, self.cost_model, self.sizes,
+                                  self.shard_map, self.merge_us)
             for r in active)
+        if self.shard_map is not None:
+            return total
         return total / max(1, int(self.cfg.num_ret_workers))
 
     def evaluate(self, req, now: float, queue_len: int,

@@ -161,4 +161,14 @@ MIXES = {
                  "irg": 1.0, "recomp": 2.0},
         slo_tiers_us={"one-shot": 2e6, "hyde": 3e6, "recomp": 5e6,
                       "multistep": 12e6, "irg": 12e6}),
+    # retrieval-bound traffic (multi-hop pipelines dominate): the mix the
+    # shard-mode serving sweep (benchmarks/bench_sharded_serving.py) uses —
+    # retrieval-worker scaling and scatter-gather overheads only show when
+    # probe volume, not decoding, is the bottleneck
+    "retrieval-heavy": MixSpec(
+        "retrieval-heavy",
+        weights={"one-shot": 1.0, "multistep": 3.0, "irg": 3.0,
+                 "recomp": 2.0},
+        slo_tiers_us={"one-shot": 2.5e6, "recomp": 8e6,
+                      "multistep": 12e6, "irg": 12e6}),
 }

@@ -2,8 +2,11 @@ import os
 import sys
 
 # smoke tests must see exactly 1 device (the dry-run sets its own flags in a
-# separate process); make sure nothing leaks in
-os.environ.pop("XLA_FLAGS", None)
+# separate process); make sure nothing leaks in — unless the run *asks* for
+# a forced multi-device host platform (REPRO_KEEP_XLA_FLAGS=1, used by CI to
+# exercise the sharded all-gather/merge paths with real shards)
+if os.environ.get("REPRO_KEEP_XLA_FLAGS") != "1":
+    os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 

@@ -1,6 +1,9 @@
-"""Sharded-index retrieval: correctness on a trivial mesh + multi-device
+"""Sharded-index retrieval: correctness on a trivial mesh, multi-device
 equivalence in a subprocess (host-platform device override must precede jax
-init, so the 8-device check runs isolated)."""
+init, so the 8-device check runs isolated), and — when the test process
+itself was launched with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+(``REPRO_KEEP_XLA_FLAGS=1``, the CI shard job) — the same all-gather/merge
+path in-process with real shards."""
 import os
 import subprocess
 import sys
@@ -57,6 +60,40 @@ def test_sharded_search_8way_equivalence():
     r = subprocess.run(
         [sys.executable, "-c", _SUBPROC, src],
         capture_output=True, text=True, timeout=300,
-        env={**os.environ, "XLA_FLAGS": ""},
+        env={**os.environ, "XLA_FLAGS": "",
+             "REPRO_KEEP_XLA_FLAGS": "0"},
     )
     assert r.returncode == 0 and "OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.skipif(jax.device_count() < 4,
+                    reason="needs >=4 devices (run the suite with "
+                           "REPRO_KEEP_XLA_FLAGS=1 XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=4)")
+def test_sharded_search_multidevice_inprocess():
+    """With a forced multi-device CPU platform, make_sharded_search's
+    all-gather + k-way merge runs with *real* shards in this process (not a
+    1-device mesh), and still matches the single-device oracle — and the
+    serving-path ShardMap split mirrors the mesh's contiguous tile ranges."""
+    from repro.retrieval.distributed import (
+        ShardMap, make_sharded_search, reference_search,
+    )
+
+    n_dev = min(4, jax.device_count())
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    rng = np.random.default_rng(2)
+    Q, C, L, d, k = 5, 4 * n_dev, 128, 32, 6
+    q = jnp.asarray(rng.standard_normal((Q, d)), jnp.float32)
+    slab = jnp.asarray(rng.standard_normal((C, L, d)), jnp.float32)
+    valid = jnp.asarray(rng.integers(1, L + 1, (C,)), jnp.int32)
+    f = make_sharded_search(mesh, k)
+    with mesh:
+        dist, rows = f(q, slab, valid)
+    dref, rref = reference_search(q, slab, valid, k)
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(dref), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(rows), np.asarray(rref))
+    # the mesh shards C/n_dev contiguous tiles per chip; ShardMap.build over
+    # equal-sized tiles produces the same contiguous ranges
+    sm = ShardMap.build(np.full(C, L), n_dev)
+    np.testing.assert_array_equal(
+        sm.bounds, np.arange(0, C + 1, C // n_dev))

@@ -1,0 +1,82 @@
+"""Hypothesis property suite for shard-mode scatter-gather merging:
+random cluster->shard assignments, probe lists, and k — the shard-split +
+k-way merge must equal the whole-index ``BatchTopK`` fold for all seeds,
+including empty-shard and all-probes-on-one-shard corners."""
+import numpy as np
+import pytest
+
+from repro.retrieval.distributed import ShardMap
+from repro.retrieval.plan import (
+    BatchTopK,
+    PlanBuilder,
+    gather_scatter_rows,
+    make_gather_plan,
+)
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@st.composite
+def _shard_cases(draw):
+    n_clusters = draw(st.integers(4, 16))
+    n_shards = draw(st.integers(1, 5))
+    # arbitrary assignment; empty shards and one-shard pileups included
+    owner = draw(st.lists(st.integers(0, n_shards - 1),
+                          min_size=n_clusters, max_size=n_clusters))
+    k = draw(st.integers(1, 8))
+    n_probes = draw(st.integers(1, n_clusters))
+    probes = draw(st.permutations(list(range(n_clusters))))[:n_probes]
+    seed = draw(st.integers(0, 2**16))
+    return n_clusters, n_shards, owner, k, probes, seed
+
+
+_INDEX_MEMO: dict = {}
+
+
+def _property_index(n_clusters: int, seed: int):
+    """Small IVF index per (n_clusters, seed) — memoised so hypothesis
+    examples don't pay a fresh kmeans/jit each draw."""
+    from repro.retrieval import CorpusConfig, IVFIndex, make_corpus
+
+    key = (n_clusters, seed)
+    if key not in _INDEX_MEMO:
+        docs, _, _ = make_corpus(CorpusConfig(
+            n_docs=64 * n_clusters, dim=8, n_topics=n_clusters, seed=seed))
+        _INDEX_MEMO[key] = IVFIndex.build(docs, n_clusters, iters=2)
+    return _INDEX_MEMO[key]
+
+
+@settings(max_examples=30, deadline=None)
+@given(case=_shard_cases())
+def test_shard_split_merge_equals_whole_index_fold(case):
+    """Property: for random cluster->shard assignments, probe lists, and k,
+    scanning per-shard parts and k-way merging the partial rows equals the
+    whole-index ``BatchTopK`` fold — including empty shards and
+    all-probes-on-one-shard corners."""
+    n_clusters, n_shards, owner, k, probes, seed = case
+    index = _property_index(n_clusters, seed % 3)
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal(index.dim).astype(np.float32)
+    sm = ShardMap.from_owner(owner, n_shards=n_shards)
+
+    # whole-index fold: one plan over the full probe list
+    whole = make_gather_plan(q, probes, k=k)
+    ref = whole.finalize(index.search_plan(whole))
+
+    # shard fold: per-part scans scattered into a gather board
+    gather = make_gather_plan(q, probes, k=k)
+    board = BatchTopK.empty(len(probes), gather.k)
+    owners = sm.owner_of(probes)
+    for shard, part in sm.split(probes):
+        pb = PlanBuilder()
+        pb.add(q, part, k=k)
+        partial = pb.build()
+        rows = index.search_plan(partial)
+        gather_scatter_rows(board, np.flatnonzero(owners == shard),
+                            rows, 0, len(part))
+    res = gather.finalize(board)
+    np.testing.assert_array_equal(res.ids, ref.ids)
+    np.testing.assert_array_equal(res.dists, ref.dists)
+    np.testing.assert_array_equal(res.no_improve, ref.no_improve)
+    np.testing.assert_array_equal(res.last_kth, ref.last_kth)

@@ -1,0 +1,363 @@
+"""Shard-aware serving: scatter-gather parity harness.
+
+Covers the distributed-retrieval serving path end to end:
+
+* function-level bit-identity: ``scatter_gather_search`` == ``plan_search``
+  == the ``reference_search`` slab oracle, across shard counts and
+  arbitrary ownership maps;
+* serving-level parity: shard-mode servers (1/2/4 shards) produce the same
+  retrieval results as a single-worker whole-index server for every
+  workflow class in ``MIXES``, and the final merged top-k of every request
+  matches the full-search oracle;
+* gating: with ``index_sharding`` off, per-request event fingerprints are
+  bit-identical to the default (pre-shard) configuration across
+  hedra/async/sequential x 1/4 workers;
+* shard-mode cost model (max over shards + merge term, not a sum);
+* per-worker device-slab residency under sharding;
+* crash recovery: a journaled shard-mode run cut mid-flight re-admits
+  cleanly into a warm shard-mode server.
+
+The hypothesis property test (random cluster->shard assignments, probe
+lists, and k) lives at the bottom, gated on hypothesis availability like
+the other property suites.
+"""
+import numpy as np
+import pytest
+
+from repro import workflows
+from repro.core.backends import SimBackend
+from repro.core.wavefront import SchedulerConfig
+from repro.retrieval.distributed import ShardMap, scatter_gather_search
+from repro.retrieval.hybrid import HybridRetrievalEngine
+from repro.retrieval.ivf import ClusterCostModel
+from repro.retrieval.plan import (
+    BatchTopK,
+    PlanBuilder,
+    gather_scatter_rows,
+    make_gather_plan,
+    plan_search,
+)
+from repro.server import Server
+from repro.serving import dispatch
+from repro.serving.workload import MIXES, poisson_arrivals
+
+RET_HEAVY = ClusterCostModel(fixed_us=150.0, per_vector_us=8.0,
+                             per_query_us=2.0)
+ALL_WORKFLOWS = sorted({w for mix in MIXES.values() for w in mix.weights})
+SHARD_COUNTS = [1, 2, 4]
+
+
+def _server(index, emb, mode="hedra", nw=1, *, sharding=False,
+            preserve=False, hot_cache=0, **cfg):
+    hybrid = None
+    if hot_cache:
+        hybrid = HybridRetrievalEngine(index, cache_capacity=hot_cache,
+                                       update_interval=10,
+                                       transit_substages=1, kernel_impl="ref")
+    be = SimBackend(index, emb, hybrid=hybrid, cost_model=RET_HEAVY, seed=0)
+    if preserve:
+        # result-preserving settings: final stage top-k == full probe-set
+        # top-k regardless of sub-stage partitioning / event timing, which
+        # is what makes results comparable across worker/shard counts
+        cfg.setdefault("enable_cache_answer", False)
+        cfg.setdefault("early_term_mode", "lossless")
+    return Server(index, emb, mode=mode, backend=be, nprobe=12, topk=5,
+                  num_ret_workers=nw, index_sharding=sharding, **cfg)
+
+
+def _load(server, names, n=12, rate=8.0, seed=5):
+    arr = poisson_arrivals(rate, n, seed=seed)
+    for i, t in enumerate(arr):
+        server.add_request(f"q{i}", workflows.build(names[i % len(names)]),
+                           arrival_us=t)
+
+
+def _ret_outputs(server):
+    """request_id -> retrieval doc-id lists in the final state."""
+    return {r.request_id: {k: v for k, v in r.state.items()
+                           if isinstance(v, list)}
+            for r in server.sched.done}
+
+
+def _fingerprints(server):
+    return {r.request_id: [(float(t), e, repr(p)) for t, e, p in r.events]
+            for r in server.sched.done}
+
+
+# ------------------------------------------------ function-level bit parity
+
+
+def test_scatter_gather_matches_plan_search_bitwise(small_index):
+    rng = np.random.default_rng(0)
+    q = rng.standard_normal((6, small_index.dim)).astype(np.float32)
+    D0, I0 = plan_search(small_index, q, nprobe=16, k=5)
+    for ns in SHARD_COUNTS + [7]:
+        sm = ShardMap.build(small_index.cluster_sizes(), ns)
+        D1, I1 = scatter_gather_search(small_index, q, 16, 5, sm)
+        np.testing.assert_array_equal(D0, D1)
+        np.testing.assert_array_equal(I0, I1)
+    # arbitrary (non-contiguous) ownership, including an empty shard
+    owner = rng.integers(0, 3, small_index.n_clusters)
+    sm = ShardMap.from_owner(owner, n_shards=5)
+    D1, I1 = scatter_gather_search(small_index, q, 16, 5, sm)
+    np.testing.assert_array_equal(D0, D1)
+    np.testing.assert_array_equal(I0, I1)
+
+
+def test_scatter_gather_matches_reference_search_oracle(small_index):
+    """The serving-path scatter-gather merge agrees with the distributed
+    module's slab oracle (``reference_search``) on doc ids and distances."""
+    from repro.retrieval.distributed import reference_search
+
+    rng = np.random.default_rng(1)
+    q = rng.standard_normal((4, small_index.dim)).astype(np.float32)
+    k = 5
+    # full-index slab: probe every cluster so both sides rank all vectors
+    cids = list(range(small_index.n_clusters))
+    slab, valid, slab_ids = small_index.cluster_tensor(cids)
+    dref, rows = reference_search(q, slab, valid, k)
+    oracle_ids = np.asarray(slab_ids).reshape(-1)[np.asarray(rows)]
+    sm = ShardMap.build(small_index.cluster_sizes(), 4)
+    D, I = scatter_gather_search(small_index, q, small_index.n_clusters, k, sm)
+    np.testing.assert_array_equal(I, oracle_ids)
+    np.testing.assert_allclose(D, np.asarray(dref), rtol=1e-4, atol=1e-3)
+
+
+def test_shard_map_contiguous_and_balanced(small_index):
+    sizes = small_index.cluster_sizes()
+    for ns in (2, 4, 8):
+        sm = ShardMap.build(sizes, ns)
+        assert sm.n_shards == ns
+        assert sm.bounds[0] == 0 and sm.bounds[-1] == small_index.n_clusters
+        assert np.all(np.diff(sm.bounds) > 0)  # contiguous, non-empty
+        # ownership follows the range table
+        for s in range(ns):
+            assert np.all(sm.owner[sm.bounds[s]: sm.bounds[s + 1]] == s)
+        mass = sm.shard_sizes(sizes)
+        assert mass.max() / mass.mean() < 2.0  # balanced by vector count
+
+    def split_roundtrip(clusters):
+        parts = sm.split(clusters)
+        flat = [c for _, p in parts for c in p]
+        assert sorted(flat) == sorted(clusters)
+        for s, p in parts:
+            assert all(int(sm.owner[c]) == s for c in p)
+
+    split_roundtrip([0, 5, 17, 44, 29, 3])
+    assert sm.split([]) == []
+
+
+# ---------------------------------------------------- serving-level parity
+
+
+@pytest.mark.parametrize("mix_name", sorted(MIXES))
+def test_sharded_serving_matches_whole_index(small_index, embedder, mix_name):
+    """For every workflow class in every mix: shard-mode retrieval results
+    (1/2/4 shards) == single-worker whole-index serving results, and the
+    final merged top-k of every request == the full-search oracle."""
+    mix = MIXES[mix_name]
+    names = sorted(mix.weights)
+    base = _server(small_index, embedder, nw=1, sharding=False, preserve=True)
+    _load(base, names)
+    base.run()
+    want = _ret_outputs(base)
+    for nw in SHARD_COUNTS:
+        s = _server(small_index, embedder, nw=nw, sharding=True,
+                    preserve=True)
+        _load(s, names)
+        m = s.run()
+        assert m.finished == len(want)
+        assert _ret_outputs(s) == want
+        if nw > 1:
+            assert m.shard_scatters > 0 and m.shard_merges > 0
+            assert m.shard_parts >= m.shard_scatters
+        # merged top-k == full-search oracle for the final retrieval round
+        for r in s.sched.done:
+            if r.round_idx == 0 or "docs" not in r.state:
+                continue
+            node = next(n for n in r.graph.nodes.values()
+                        if n.kind == "retrieval")
+            qv = embedder.embed_query(r.request_id, r.round_idx - 1)
+            _, ids = small_index.search(qv[None], 12, node.topk or 5)
+            assert r.state["docs"] == [int(i) for i in ids[0] if i >= 0]
+
+
+@pytest.mark.parametrize("mode", ["hedra", "async", "sequential"])
+def test_sharded_modes_complete_and_scatter(small_index, embedder, mode):
+    """All three scheduling modes serve a shard-mode pool to completion,
+    with whole coarse stages scattering across owners too."""
+    s = _server(small_index, embedder, mode=mode, nw=4, sharding=True)
+    _load(s, ALL_WORKFLOWS, n=16, rate=20.0)
+    m = s.run()
+    assert m.finished == 16
+    assert m.shard_scatters > 0
+    assert m.shard_parts >= m.shard_scatters
+    if mode != "hedra":
+        # coarse whole-stage scatters span several shards; hedra's Eq.(1)
+        # budget can legitimately cut sub-stages down to single-shard parts
+        assert m.shard_parts > m.shard_scatters
+    rep = s.shard_report()
+    assert rep["n_shards"] == 4
+    assert rep["shard_merges"] == m.shard_merges
+
+
+# -------------------------------------------------------- off-knob gating
+
+
+@pytest.mark.parametrize("mode", ["hedra", "async", "sequential"])
+@pytest.mark.parametrize("nw", [1, 4])
+def test_sharding_off_fingerprints_unchanged(small_index, embedder, mode, nw):
+    """index_sharding=False must leave the serving loop on the exact
+    pre-shard path: per-request event fingerprints identical to the default
+    configuration (PR 4 behaviour), across modes and worker counts."""
+    assert SchedulerConfig().index_sharding is False
+    s1 = _server(small_index, embedder, mode=mode, nw=nw)
+    _load(s1, ALL_WORKFLOWS, n=14)
+    s1.run()
+    s2 = _server(small_index, embedder, mode=mode, nw=nw, sharding=False)
+    _load(s2, ALL_WORKFLOWS, n=14)
+    s2.run()
+    assert s2.sched.shard_map is None
+    assert s2.sched.metrics.shard_scatters == 0
+    assert _fingerprints(s1) == _fingerprints(s2)
+
+
+# ------------------------------------------------------ shard cost model
+
+
+def test_sharded_scan_cost_is_max_plus_merge():
+    sizes = np.array([100, 100, 100, 100], np.int64)
+    cm = ClusterCostModel(fixed_us=10.0, per_vector_us=1.0, per_query_us=0.0)
+    sm = ShardMap.from_owner([0, 0, 1, 1])
+    clusters = np.array([0, 1, 2, 3], np.int64)
+    flat = cm.batch_cost_us(sizes[clusters])  # single-worker sum
+    sharded = dispatch.sharded_scan_cost_us(clusters, cm, sizes, sm,
+                                            merge_us=25.0)
+    # two equal shards: max is half the sum; two partial sets merge
+    assert sharded == pytest.approx(flat / 2.0 + 2 * 25.0)
+    # all probes on one shard: no parallelism, one merge
+    one = dispatch.sharded_scan_cost_us(np.array([0, 1]), cm, sizes, sm,
+                                        merge_us=25.0)
+    assert one == pytest.approx(cm.batch_cost_us(sizes[:2]) + 25.0)
+    assert dispatch.sharded_scan_cost_us(np.zeros(0, np.int64), cm, sizes,
+                                         sm, merge_us=25.0) == 0.0
+
+
+def test_admission_lower_bound_gains_merge_term(small_index):
+    from repro.core.runtime import RequestContext
+    from repro.core.substage import TimeBudget
+
+    sizes = small_index.cluster_sizes()
+    cfg = SchedulerConfig.preset("hedra", admission_control=True,
+                                 num_ret_workers=4, index_sharding=True,
+                                 shard_merge_us=40.0)
+    sm = ShardMap.build(sizes, 4)
+    ac_flat = dispatch.AdmissionController(cfg, TimeBudget(),
+                                           ClusterCostModel(), sizes)
+    ac_shard = dispatch.AdmissionController(cfg, TimeBudget(),
+                                            ClusterCostModel(), sizes,
+                                            shard_map=sm)
+    req = RequestContext(0, workflows.build("multistep"), {})
+    n_ret = sum(1 for n in req.graph.nodes.values() if n.kind == "retrieval")
+    assert ac_shard.lower_bound_us(req) == pytest.approx(
+        ac_flat.lower_bound_us(req) + n_ret * 40.0)
+
+
+def test_pick_shard_worker_owner_and_replica_routing():
+    from repro.crossreq.popularity import ReplicaMap
+
+    d = dispatch.RetrievalDispatcher(4, 16, policy="affinity")
+    # owner idle -> owner
+    assert d.pick_shard_worker([3, 4], owner=1, candidates=[0, 1, 2]) == 1
+    # owner busy, no replicas -> deferred
+    assert d.pick_shard_worker([3, 4], owner=3, candidates=[0, 1, 2]) is None
+    # replicated hot cluster: a holder covering *all* clusters may serve it
+    rm = ReplicaMap(4, 2)
+    rm._owners = {3: (1, 2), 4: (2, 3)}
+    d2 = dispatch.RetrievalDispatcher(4, 16, policy="affinity",
+                                      replica_map=rm)
+    assert d2.pick_shard_worker([3, 4], owner=1, candidates=[0, 2]) == 2
+    assert d2.replica_routes == 1
+    # partial coverage (cluster 5 unreplicated) -> owner only
+    assert d2.pick_shard_worker([3, 5], owner=1, candidates=[0, 2]) is None
+
+
+# --------------------------------------------- per-worker slab residency
+
+
+def test_per_worker_residency_drops_with_shards(small_index, embedder):
+    """Shard mode partitions the device slab: primaries live on their
+    owner's slots and per-worker residency shrinks ~N x."""
+    residency = {}
+    for nw in (1, 2, 4):
+        s = _server(small_index, embedder, nw=nw, sharding=nw > 1,
+                    hot_cache=16)
+        _load(s, ALL_WORKFLOWS, n=24, rate=20.0)
+        m = s.run()
+        assert m.finished == 24
+        cache = s.backend.hybrid.cache
+        if nw == 1:
+            residency[1] = len(cache.resident_ids)
+            continue
+        sm = s.sched.shard_map
+        for cid in cache.resident_ids:
+            assert cache._resident[cid] % nw == int(sm.owner[cid])
+        per = cache.per_owner_resident()
+        assert set(per) == set(range(nw))
+        residency[nw] = max(per.values())
+        # each worker's partition holds at most capacity/N slots
+        assert residency[nw] <= -(-16 // nw)
+    assert residency[2] <= residency[1] / 2 + 1
+    assert residency[4] <= residency[1] / 4 + 1
+
+
+# ------------------------------------------------------- crash recovery
+
+
+def test_journal_replay_readmits_into_warm_sharded_server(tmp_path,
+                                                          small_index,
+                                                          embedder):
+    """Journal a shard-mode run, cut it mid-flight, and re-admit the
+    unfinished rows into a warm shard-mode server: everything completes,
+    shard routing preserved."""
+    p = str(tmp_path / "journal.jsonl")
+    s1 = _server(small_index, embedder, nw=2, sharding=True, preserve=True)
+    _load(s1, ALL_WORKFLOWS, n=10, rate=20.0)
+    # advance far enough that some requests finished and some are in flight
+    horizon = 0.0
+    while not (s1.sched.done and (s1.sched.active or s1.sched.pending)):
+        horizon += 50_000.0
+        s1.step(horizon)
+        assert horizon < 60e6, "never reached a mixed done/in-flight state"
+    s1.write_journal(p)
+    rows = Server.replay_unfinished(p)
+    assert rows and len(rows) < 10
+
+    # warm replacement server: some native traffic already admitted, clock
+    # advanced, then the journal rows land on top
+    s2 = _server(small_index, embedder, nw=2, sharding=True, preserve=True)
+    s2.add_request("native", workflows.build("one-shot"), arrival_us=0.0)
+    s2.step(1000.0)
+    ids = s2.readmit(rows)
+    assert all(i is not None for i in ids)
+    m2 = s2.run()
+    assert m2.finished == 1 + len(rows)
+    assert m2.shard_scatters > 0  # recovered requests scatter like fresh ones
+    rep = s2.shard_report()
+    assert rep["n_shards"] == 2
+    # re-admissions honored the warm clock: no event precedes re-admission
+    for r in s2.sched.done:
+        if r.request_id == 0:
+            continue
+        assert all(t >= 1000.0 for t, _, _ in r.events)
+    # recovered requests produce the same retrieval results as the cut run
+    # would have: spot-check against the full-search oracle
+    done_by_input = {r.state["input"]: r for r in s2.sched.done}
+    for row in rows:
+        r = done_by_input[row["input"]]
+        if "docs" in r.state and r.round_idx > 0:
+            node = next(n for n in r.graph.nodes.values()
+                        if n.kind == "retrieval")
+            qv = embedder.embed_query(r.request_id, r.round_idx - 1)
+            _, ids_ref = small_index.search(qv[None], 12, node.topk or 5)
+            assert r.state["docs"] == [int(i) for i in ids_ref[0] if i >= 0]
