@@ -1,7 +1,10 @@
 """Streaming serving saturation sweep (the paper's heterogeneous open-loop
 scenario): sliding-window goodput — finished-under-SLO per second, warmup
 excluded — vs offered load, for hedra/async/sequential over a pure one-shot
-stream and a heterogeneous five-workflow mix with per-class SLO tiers.
+stream, the balanced five-workflow mix, and the ten-workflow
+``heterogeneous`` mix where registry stages (rerank / rewrite / hybrid /
+compress pipelines) compete with IVF scans for the same host pool — each
+with per-class SLO tiers.
 
 Each point runs the streaming front-end (``Server.serve``): the event clock
 is stepped to every Poisson arrival, the request is submitted mid-run
@@ -43,7 +46,8 @@ def run(quick: bool = True) -> None:
     index, embedder = fixture()
     rates = [4.0, 16.0] if quick else [2.0, 4.0, 8.0, 16.0, 24.0, 32.0]
     n = 40 if quick else 150
-    mixes = {"oneshot": MIXES["pure-oneshot"], "mixed": MIXES["balanced"]}
+    mixes = {"oneshot": MIXES["pure-oneshot"], "mixed": MIXES["balanced"],
+             "hetero": MIXES["heterogeneous"]}
     for mix_name, mix in mixes.items():
         for rate in rates:
             for mode in MODES:

@@ -1,0 +1,77 @@
+"""Regenerate tests/golden_fingerprints.json: per-request event-trace
+hashes for the five paper workflows across scheduler modes and worker
+counts.  Run from the repo root::
+
+    PYTHONPATH=src python scripts/make_golden_fingerprints.py
+
+The goldens pin the serving loop's observable behaviour: any refactor of
+the stage/scheduler layers must keep every (mode, num_ret_workers) trace
+bit-identical for graphs built only from the paper's two original node
+kinds.  tests/test_stage_registry.py recomputes the same hashes and
+compares.  Everything below is seeded (synthetic corpus, k-means, workload
+lengths, Poisson arrivals, backend noise), so the traces are
+machine-independent.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import workflows
+from repro.core.backends import SimBackend
+from repro.retrieval import CorpusConfig, IVFIndex, SyntheticEmbedder, make_corpus
+from repro.retrieval.ivf import ClusterCostModel
+from repro.server import Server
+from repro.serving.workload import poisson_arrivals
+
+NAMES = ["one-shot", "hyde", "irg", "multistep", "recomp"]
+RET_HEAVY = ClusterCostModel(fixed_us=150.0, per_vector_us=8.0, per_query_us=2.0)
+MODES = ["hedra", "async", "sequential"]
+WORKERS = [1, 4]
+
+
+def fixture():
+    docs, _, topics = make_corpus(CorpusConfig(
+        n_docs=12000, dim=48, n_topics=96, zipf_alpha=1.2, seed=0))
+    return IVFIndex.build(docs, 48, iters=4), SyntheticEmbedder(topics)
+
+
+def trace_hash(server) -> str:
+    fp = {
+        r.request_id: [(float(t), e, repr(p)) for t, e, p in r.events]
+        for r in server.sched.done
+    }
+    blob = json.dumps(fp, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+def main() -> None:
+    index, emb = fixture()
+    arr = poisson_arrivals(8.0, 20, seed=5)
+    out = {}
+    for mode in MODES:
+        for nw in WORKERS:
+            be = SimBackend(index, emb, cost_model=RET_HEAVY, seed=0)
+            s = Server(index, emb, mode=mode, backend=be, nprobe=12, topk=5,
+                       num_ret_workers=nw)
+            for i, t in enumerate(arr):
+                s.add_request(f"q{i}", workflows.build(NAMES[i % 5]),
+                              arrival_us=float(t))
+            m = s.run()
+            assert m.finished == 20, (mode, nw, m.finished)
+            out[f"{mode}-nw{nw}"] = trace_hash(s)
+            print(f"{mode}-nw{nw}: {out[f'{mode}-nw{nw}']}")
+    path = os.path.join(os.path.dirname(__file__), "..", "tests",
+                        "golden_fingerprints.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(path)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -68,6 +68,7 @@ class SimBackend:
         # crossreq accounting: modeled cost of the duplicate scans avoided by
         # fused groups (a group with fanout f charges once, not f times)
         self.fused_saved_us = 0.0
+        self._lexical = None  # lazily-built lexical channel (hybrid fusion)
 
     def _rng_for_worker(self, worker_id: int) -> np.random.Generator:
         rng = self._worker_rng.get(worker_id)
@@ -190,6 +191,27 @@ class SimBackend:
 
         return charge, results_fn
 
+    # --------------------------------------------------------- host stages
+    def stage_charged(self, task, worker_id: int = 0):
+        """Modelled-cost analogue of search_charged for generic host-stage
+        work (rerank/compress scoring batches): the scheduler is charged the
+        StageSpec's modelled cost while the exact compute is deferred to
+        completion time; a fused group charges once for the whole
+        subscriber set."""
+        charge = float(task.cost_us)
+        self.worker_busy_us[worker_id] = (
+            self.worker_busy_us.get(worker_id, 0.0) + charge)
+        if task.fanout > 1:
+            self.fused_saved_us += charge * (task.fanout - 1)
+        return charge, task.execute
+
+    def lexical_scores(self, text: str, doc_ids) -> dict:
+        """Lexical (term-overlap) channel for dense+lexical hybrid fusion."""
+        if self._lexical is None:
+            from repro.retrieval.lexical import LexicalScorer
+            self._lexical = LexicalScorer()
+        return self._lexical.scores(text, doc_ids)
+
     # ------------------------------------------------------ fault injection
     def maybe_straggle(self, dur: float, worker_id: int = -1) -> float:
         """Per-worker straggler streams: worker_id -1 is the generation
@@ -232,6 +254,7 @@ class RealBackend:
         # default so resident clusters are discounted comparably.
         self.fused_saved_us = 0.0
         self.device_speedup = 8.0
+        self._lexical = None
 
     def query_embedding(self, req, round_idx: int) -> np.ndarray:
         return self.embedder.embed_query(req.request_id, round_idx)
@@ -278,6 +301,24 @@ class RealBackend:
         self.worker_busy_us[worker_id] = (
             self.worker_busy_us.get(worker_id, 0.0) + measured)
         return measured, lambda: out
+
+    def stage_charged(self, task, worker_id: int = 0):
+        """Wall-clock host-stage execution: run the batch now, charge the
+        measured time, hand completion a closure over the result."""
+        if task.fanout > 1:
+            self.fused_saved_us += float(task.cost_us) * (task.fanout - 1)
+        t0 = time.perf_counter()
+        result = task.execute()
+        measured = (time.perf_counter() - t0) * 1e6
+        self.worker_busy_us[worker_id] = (
+            self.worker_busy_us.get(worker_id, 0.0) + measured)
+        return measured, lambda: result
+
+    def lexical_scores(self, text: str, doc_ids) -> dict:
+        if self._lexical is None:
+            from repro.retrieval.lexical import LexicalScorer
+            self._lexical = LexicalScorer()
+        return self._lexical.scores(text, doc_ids)
 
     def maybe_straggle(self, dur: float, worker_id: int = -1) -> float:
         return dur

@@ -17,7 +17,7 @@ from typing import Any, Optional
 
 import numpy as np
 
-from repro.core.ragraph import END, GenerationNode, Node, RAGraph, RetrievalNode
+from repro.core.ragraph import END, Node, RAGraph
 from repro.retrieval.ivf import TopK
 
 _sid_counter = itertools.count()
@@ -68,6 +68,27 @@ class RetProgress:
         )
 
 
+@dataclasses.dataclass
+class StageProgress:
+    """Generic host-side stage progress for registry stage kinds beyond the
+    paper's original two (rerank / rewrite / compress / ...).  The scheduler
+    treats it as an opaque queue of splittable work units; unit semantics
+    (candidate blocks, query variants) belong to the owning StageSpec, which
+    keeps spec-private state in ``payload``."""
+
+    kind: str
+    work_queue: list  # remaining work units, spec-defined granularity
+    total_units: int
+    payload: dict = dataclasses.field(default_factory=dict)
+    started_at: float = -1.0
+    inflight_units: int = 0  # units dispatched, not yet completed
+    parked: bool = False  # fused subscriber: completed by the leader
+
+    @property
+    def done(self) -> bool:
+        return not self.work_queue and self.inflight_units == 0
+
+
 # ---------------------------------------------------------------------------
 # Requests
 # ---------------------------------------------------------------------------
@@ -85,6 +106,7 @@ class RequestContext:
     finish_us: float = -1.0
     gen: Optional[GenProgress] = None
     ret: Optional[RetProgress] = None
+    stage: Optional[StageProgress] = None  # registry stage kinds beyond gen/ret
     round_idx: int = 0  # retrieval round counter (drives embedder)
     gen_round: int = 0
     # similarity cache (core/similarity.py LocalCache) — one per request
@@ -103,7 +125,7 @@ class RequestContext:
     def advance(self) -> bool:
         """Move to the successor node.  Returns False when the request ends."""
         nxt = self.graph.successor(self.current, self.state)
-        self.gen, self.ret = None, None
+        self.gen, self.ret, self.stage = None, None, None
         if nxt is END:
             self.current = None
             self.finished = True

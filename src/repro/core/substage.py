@@ -57,16 +57,24 @@ class TimeBudget:
         n = int(self.mb_us / max(self.t_decode_step_us, 1.0))
         return max(1, min(n, 64))
 
-    def clusters_for_budget(self, cluster_queue, cost_model, sizes) -> int:
-        """Incrementally admit clusters until the budget is filled (§4.2):
-        returns how many clusters from the head of the queue fit in mb."""
+    def units_for_budget(self, unit_costs) -> int:
+        """Generic Eq.(1) sizing for any splittable stage: admit work units
+        (clusters, candidate blocks, query variants, ...) from the head of
+        the queue until the budget fills; at least one unit always fits so
+        progress is guaranteed.  Stage specs hand in their per-unit cost
+        profile (see core/stages.py)."""
         budget = self.mb_us
         used = 0.0
         n = 0
-        for cid in cluster_queue:
-            c = cost_model.cost_us(int(sizes[cid]))
+        for c in unit_costs:
             if n > 0 and used + c > budget:
                 break
             used += c
             n += 1
-        return max(n, 1) if len(cluster_queue) else 0
+        return max(n, 1) if len(unit_costs) else 0
+
+    def clusters_for_budget(self, cluster_queue, cost_model, sizes) -> int:
+        """Incrementally admit clusters until the budget is filled (§4.2):
+        returns how many clusters from the head of the queue fit in mb."""
+        return self.units_for_budget(
+            [cost_model.cost_us(int(sizes[cid])) for cid in cluster_queue])

@@ -18,7 +18,6 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.ragraph import GenerationNode, RetrievalNode
 from repro.core.runtime import RequestContext, RuntimeDAG, SubNode
 from repro.core.similarity import (
     LocalCache,
@@ -59,6 +58,27 @@ def split_retrieval_next(dag: RuntimeDAG, req: RequestContext,
     n = budget.clusters_for_budget(req.ret.cluster_queue, cost_model, sizes)
     clusters = req.ret.cluster_queue[:n]
     return dag.new_subnode(req, "ret", {"clusters": list(clusters)}, deps=deps,
+                           speculative=speculative)
+
+
+def split_stage_next(dag: RuntimeDAG, req: RequestContext,
+                     budget: TimeBudget, unit_costs,
+                     *, whole_stage: bool = False,
+                     speculative: bool = False, deps=()) -> Optional[SubNode]:
+    """Materialise the next sub-node of a generic registry host stage
+    (rerank / rewrite / compress / ...): work units admitted from the head
+    of the stage queue until the Eq.(1) budget fills (the whole queue for
+    coarse whole-stage dispatch).  ``unit_costs`` is the per-unit cost list
+    the owning StageSpec computed — the registry's sub-stage factory, the
+    direct analogue of ``split_retrieval_next`` for non-cluster units."""
+    st = req.stage
+    assert st is not None
+    if not st.work_queue:
+        return None
+    n = (len(st.work_queue) if whole_stage
+         else budget.units_for_budget(unit_costs))
+    units = list(st.work_queue[:n])
+    return dag.new_subnode(req, st.kind, {"units": units}, deps=deps,
                            speculative=speculative)
 
 
@@ -121,7 +141,7 @@ def maybe_early_terminate(index, req: RequestContext,
 
 
 def add_speculative_generation(dag: RuntimeDAG, req: RequestContext,
-                               basis: SubNode, target_node: GenerationNode,
+                               basis: SubNode, target_node,
                                target_tokens: int, budget: TimeBudget) -> SubNode:
     """Start the follower Generation node from partial retrieval results.
     The speculative sub-node depends only on the *basis* retrieval sub-node,

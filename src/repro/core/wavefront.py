@@ -28,9 +28,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.ragraph import GenerationNode, RetrievalNode
-from repro.core.runtime import GenProgress, RequestContext, RetProgress, RuntimeDAG
-from repro.core import similarity
+from repro.core import stages
+from repro.core.runtime import RequestContext, RuntimeDAG
 from repro.core.similarity import LocalCache
 from repro.core.speculation import SpeculationPolicy, Speculator
 from repro.core.substage import TimeBudget
@@ -160,6 +159,9 @@ class Metrics:
     shard_scatters: int = 0  # sub-stages split across shards
     shard_parts: int = 0  # partial scan tasks dispatched
     shard_merges: int = 0  # k-way gather merges completed
+    # generic registry host stages (rerank / rewrite / compress / ...)
+    stage_tasks: int = 0  # dispatched stage work batches / variant scans
+    lexical_fusions: int = 0  # hybrid dense+lexical RRF folds applied
 
     @property
     def ret_busy_us(self) -> float:
@@ -277,6 +279,8 @@ class Metrics:
             "shard_scatters": self.shard_scatters,
             "shard_parts": self.shard_parts,
             "shard_merges": self.shard_merges,
+            "stage_tasks": self.stage_tasks,
+            "lexical_fusions": self.lexical_fusions,
             # hybrid-engine counters, surfaced so benches/--json records see
             # them without reaching into the backend
             "cache_hit_rate": float(self.cache_stats.get("hit_rate", 0.0)),
@@ -419,77 +423,14 @@ class WavefrontScheduler:
                 return
             if req.current is None:
                 req.start()
-            node = req.node
-            if isinstance(node, GenerationNode):
-                if req.gen is None:
-                    tgt = self.workload.gen_tokens(req.request_id, node.node_id,
-                                                   node.max_tokens)
-                    req.gen = GenProgress(target_tokens=tgt, started_at=now,
-                                          node_id=node.node_id)
-                    req.log(now, "gen_stage_start", node.node_id)
-                return
-            assert isinstance(node, RetrievalNode)
-            if req.ret is None:
-                nprobe = node.nprobe or self.cfg.nprobe
-                hint = self._probe_hints.pop(req.request_id, None)
-                if hint is not None:
-                    qv, queue = hint
-                    queue = list(queue)
-                else:
-                    qv = self.backend.query_embedding(req, req.round_idx)
-                    queue = [int(c) for c in
-                             self.index.probe_order(qv[None], nprobe)[0]]
-                req.ret = RetProgress(
-                    query_vec=qv, cluster_queue=queue,
-                    topk=TopK.empty(node.topk or self.cfg.topk),
-                    k=node.topk or self.cfg.topk, nprobe=nprobe, started_at=now,
-                )
-                if req.sim_cache is None:
-                    req.sim_cache = LocalCache()
-                req.log(now, "ret_stage_start", node.node_id)
-                if self.cfg.enable_reorder or self.cfg.enable_cache_answer:
-                    rep = transforms.reorder_retrieval(req)
-                    if rep["reordered"]:
-                        self.metrics.reorders += 1
-                    if rep["cache_answer"] and self.cfg.enable_cache_answer:
-                        self.metrics.cache_answers += 1
-                        self._finish_ret_stage(req, now)
-                        continue  # advanced; maybe next stage is instant too
-                    if rep["cache_answer"]:
-                        # cache answers disabled: restore full queue
-                        req.ret.answered_from_cache = False
-                # cross-request semantic cache: conclusive answer (exact-key
-                # or O1 ball bound), else inherit the nearest hot entry's
-                # H_v/C_v when this request has no local history of its own
-                if (self.crossreq is not None
-                        and self.crossreq.global_cache is not None
-                        and not req.ret.done):
-                    ans, ent = self.crossreq.global_cache.consult(
-                        req.ret.query_vec, req.ret.k, req.ret.nprobe,
-                        allow_answer=self.cfg.enable_cache_answer,
-                        allow_seed=self.cfg.enable_reorder and (
-                            req.sim_cache is None or req.sim_cache.empty))
-                    if ans is not None:
-                        req.ret.topk = req.ret.topk.merge(*ans)
-                        req.ret.answered_from_cache = True
-                        req.ret.cluster_queue = []
-                        self.metrics.global_cache_answers += 1
-                        self._finish_ret_stage(req, now)
-                        continue  # advanced; maybe next stage is instant too
-                    if ent is not None:
-                        seeded = similarity.reorder_clusters(
-                            req.ret.cluster_queue, ent)
-                        req.ret.cluster_queue = seeded.order
-                        self.metrics.global_cache_seeds += 1
-                if not self.cfg.mode == "hedra":
-                    self._ret_fifo.append(req)
+            if stages.spec_for(req.node).enter(self, req, now):
+                continue  # stage completed instantly; next may be instant too
             return
 
     def _finish_ret_stage(self, req: RequestContext, now: float) -> None:
         node = req.node
-        assert isinstance(node, RetrievalNode) and req.ret is not None
-        ids = req.ret.topk.ids
-        req.state[node.output] = [int(i) for i in ids if i >= 0]
+        assert req.ret is not None
+        stages.spec_for(node).write_output(self, req, now)
         req.sim_cache.update(req.ret.query_vec, req.ret.topk, self.index,
                              req.ret.searched)
         if req.ret.started_at >= 0:
@@ -522,18 +463,47 @@ class WavefrontScheduler:
                         self._finish_gen_stage(req, now)
             return
         req.ret = None
+        self._advance_request(req, now)
+
+    def _advance_request(self, req: RequestContext, now: float) -> None:
+        """Shared stage-completion tail: advance to the successor node (or
+        finish), preserving speculative generation progress across the hop."""
         gen_keep = req.gen
         if req.advance():
             # only restore generation progress onto the node it belongs to —
             # an unconditional restore can resurrect stale progress onto an
             # unrelated successor (e.g. the next node of a ret->ret chain)
             if (gen_keep is not None
-                    and isinstance(req.node, GenerationNode)
+                    and stages.spec_for(req.node).resource == stages.GEN
                     and gen_keep.node_id in (None, req.current)):
                 req.gen = gen_keep
             self._enter_stage(req, now)
         else:
             self._finish_request(req, now)
+
+    def _finish_stage(self, req: RequestContext, now: float) -> None:
+        """Completion of a generic registry host stage (any kind beyond the
+        dedicated gen/ret paths): fold the result into request state, feed
+        the stage time into the Eq.(1) budget EMA, fan the output out to
+        fused subscribers, and advance."""
+        prog = req.stage
+        assert prog is not None
+        sp = stages.spec(prog.kind)
+        node = req.node
+        sp.write_output(self, req, now)
+        if prog.started_at >= 0:
+            self.budget.observe_retrieval_stage(now - prog.started_at)
+        req.log(now, f"{prog.kind}_stage_done", node.node_id)
+        if self.crossreq is not None and self.crossreq.fusion is not None:
+            for sub, match in self.crossreq.fusion.complete_leader(
+                    req.request_id):
+                if (sub.finished or sub.stage is None
+                        or not sub.stage.parked):
+                    continue
+                self.metrics.dedup_fanout += 1
+                sp.adopt_from_leader(self, sub, req, match, now)
+        req.stage = None
+        self._advance_request(req, now)
 
     def _crossreq_stage_done(self, req: RequestContext, now: float) -> None:
         """Cross-request hooks at retrieval-stage completion: publish the
@@ -574,7 +544,7 @@ class WavefrontScheduler:
 
     def _finish_gen_stage(self, req: RequestContext, now: float) -> None:
         node = req.node
-        assert isinstance(node, GenerationNode) and req.gen is not None
+        assert req.gen is not None
         req.state[node.output] = {
             "tokens": req.gen.generated,
             "text": f"<gen:{req.request_id}:{node.node_id}>",
@@ -612,10 +582,13 @@ class WavefrontScheduler:
                 continue
             nid = r.current if r.current is not None else r.graph.entry()
             node = r.graph.nodes.get(nid)
-            if not isinstance(node, RetrievalNode):
+            if node is None:
+                continue
+            nprobe = stages.spec_for(node).probe_hint_nprobe(node, self.cfg)
+            if nprobe is None:
                 continue
             qv = self.backend.query_embedding(r, r.round_idx)
-            by_nprobe.setdefault(node.nprobe or self.cfg.nprobe, []).append((r, qv))
+            by_nprobe.setdefault(nprobe, []).append((r, qv))
         for nprobe, lst in by_nprobe.items():
             order = self.index.probe_order(
                 np.stack([qv for _, qv in lst]), nprobe)
@@ -665,12 +638,22 @@ class WavefrontScheduler:
             return self._assemble_ret_substage(now, idle)
         return self._assemble_ret_coarse(now, idle)
 
-    def _finalize_ret_job(self, now: float, wid: int, plan) -> dict:
-        charge, results_fn = self.backend.search_charged(plan, worker_id=wid)
+    def _finalize_ret_job(self, now: float, wid: int, plan,
+                          tasks=()) -> dict:
+        charge = 0.0
+        results_fn = None
+        if plan is not None:
+            charge, results_fn = self.backend.search_charged(plan,
+                                                             worker_id=wid)
+        task_runs = []
+        for t in tasks:
+            c, fn = self.backend.stage_charged(t, worker_id=wid)
+            charge += c
+            task_runs.append((t, fn))
         dur = self._mitigate_straggler(charge, expected=charge, worker_id=wid)
         self.dispatcher.note_busy(wid, dur)
         self.metrics.substages_ret += 1
-        return {"plan": plan, "results_fn": results_fn,
+        return {"plan": plan, "results_fn": results_fn, "tasks": task_runs,
                 "end": now + dur, "dur": dur, "worker": wid}
 
     def _add_ret_group(self, builder: PlanBuilder, r: RequestContext,
@@ -830,14 +813,26 @@ class WavefrontScheduler:
         # dispatcher spread simultaneous sub-stages instead of piling them
         # onto the worker that was least loaded when the cycle started
         cycle_load: dict[int, float] = {w: 0.0 for w in idle}
+        tasks: dict[int, list] = {w: [] for w in idle}
         cm = self.backend.cluster_cost_model
         ready = [r for r in self.active
-                 if r.ret is not None and not r.ret.done
-                 and not getattr(r.ret, "_inflight", False)]
+                 if (r.ret is not None and not r.ret.done
+                     and not getattr(r.ret, "_inflight", False))
+                 or (r.stage is not None and not r.stage.done
+                     and not r.stage.parked and r.stage.work_queue)]
         ordered = self._slack_order(ready, now)
         if self.crossreq is not None and self.crossreq.fusion is not None:
             ordered = self._fuse_wavefront(ordered)
         for r in ordered:
+            if r.stage is not None:
+                # generic registry stage: the spec splits its own work-unit
+                # queue under the budget and dispatches plan groups and/or
+                # host StageTasks (shard mode included — host arrays hold
+                # the whole index, so stage work is placement-free)
+                stages.spec(r.stage.kind).assemble(
+                    self, r, builders, tasks, cycle_load, idle, now,
+                    whole_stage=False)
+                continue
             if self.shard_map is not None:
                 self._scatter_ret(builders, cycle_load, r, idle, cm,
                                   whole_stage=False)
@@ -878,8 +873,13 @@ class WavefrontScheduler:
             for r, emb, probes in spec_items:
                 builders[spec_wid].add(emb, probes, k=SPEC_RET_K,
                                        meta=("spec", r, emb, probes))
-        return {wid: self._finalize_ret_job(now, wid, builders[wid].build())
-                for wid in idle if not builders[wid].empty}
+        jobs = {}
+        for wid in idle:
+            if builders[wid].empty and not tasks[wid]:
+                continue
+            plan = None if builders[wid].empty else builders[wid].build()
+            jobs[wid] = self._finalize_ret_job(now, wid, plan, tasks[wid])
+        return jobs
 
     def _fuse_wavefront(self, ordered: list) -> list:
         """In-flight dedup/fusion pass: a *fresh* retrieval stage whose query
@@ -892,18 +892,23 @@ class WavefrontScheduler:
         allow_near = self.cfg.enable_cache_answer
         out = []
         for r in ordered:
-            if r.ret.searched:  # mid-stage: already executing, cannot fuse
+            sp = stages.spec_for(r.node)
+            if not sp.fusion_fresh(r):  # mid-stage: executing, cannot fuse
                 out.append(r)
                 continue
-            kind = fusion.try_subscribe(r, allow_near=allow_near)
+            sig = sp.fusion_signature(self, r)
+            if sig is None:  # stage kind opts out of fusion
+                out.append(r)
+                continue
+            kind = fusion.try_subscribe(r, sig, allow_near=allow_near)
             if kind is not None:
-                r.ret._inflight = True  # type: ignore[attr-defined]
+                sp.park_subscriber(self, r)
                 if kind == "exact":
                     self.metrics.dedup_exact += 1
                 else:
                     self.metrics.dedup_near += 1
                 continue
-            fusion.register_leader(r)
+            fusion.register_leader(r, sig)
             out.append(r)
         return out
 
@@ -911,8 +916,10 @@ class WavefrontScheduler:
         """Whole-stage jobs: sequential = FIFO-1, async = batch-all-queued.
         Coarse baselines keep the paper's single-retrieval-worker shape: the
         whole batch lands on one (least-loaded) worker."""
-        self._ret_fifo = [r for r in self._ret_fifo
-                          if r in self.active and r.ret is not None and not r.ret.done]
+        self._ret_fifo = [
+            r for r in self._ret_fifo if r in self.active
+            and ((r.ret is not None and not r.ret.done)
+                 or (r.stage is not None and not r.stage.done))]
         if not self._ret_fifo:
             return {}
         if self.shard_map is not None:
@@ -922,9 +929,18 @@ class WavefrontScheduler:
             # leftover clusters queued and stay in the stage FIFO.
             builders: dict[int, PlanBuilder] = {w: PlanBuilder() for w in idle}
             cycle_load: dict[int, float] = {w: 0.0 for w in idle}
+            tasks: dict[int, list] = {w: [] for w in idle}
             cm = self.backend.cluster_cost_model
             keep = []
             for r in self._ret_fifo:
+                if r.stage is not None:
+                    # registry stages are placement-free (host arrays hold
+                    # the whole index): dispatch the whole unit queue
+                    if not r.stage.parked and r.stage.work_queue:
+                        stages.spec(r.stage.kind).assemble(
+                            self, r, builders, tasks, cycle_load, idle, now,
+                            whole_stage=True)
+                    continue
                 if getattr(r.ret, "_inflight", False):
                     keep.append(r)
                     continue
@@ -933,21 +949,37 @@ class WavefrontScheduler:
                 if r.ret.cluster_queue:
                     keep.append(r)
             self._ret_fifo = keep
-            return {wid: self._finalize_ret_job(now, wid, builders[wid].build())
-                    for wid in idle if not builders[wid].empty}
+            jobs = {}
+            for wid in idle:
+                if builders[wid].empty and not tasks[wid]:
+                    continue
+                plan = None if builders[wid].empty else builders[wid].build()
+                jobs[wid] = self._finalize_ret_job(now, wid, plan, tasks[wid])
+            return jobs
         # both coarse baselines dispatch whole stages, one-shot batched over
         # everything queued; 'sequential' additionally holds the global lock
         take = list(self._ret_fifo)
         self._ret_fifo = []
         builder = PlanBuilder()
         wid = self.dispatcher.least_loaded(idle)
+        task_list: list = []
+        cycle_load = {wid: 0.0}
         for r in take:
+            if r.stage is not None:
+                if not r.stage.parked and r.stage.work_queue:
+                    stages.spec(r.stage.kind).assemble(
+                        self, r, {wid: builder}, {wid: task_list}, cycle_load,
+                        [wid], now, whole_stage=True)
+                continue
             clusters = list(r.ret.cluster_queue)
             r.ret.cluster_queue = []
             r.ret._inflight = True  # type: ignore[attr-defined]
             self.dispatcher.note_dispatch(wid, clusters)
             self._add_ret_group(builder, r, clusters, None)
-        return {wid: self._finalize_ret_job(now, wid, builder.build())}
+        if builder.empty and not task_list:
+            return {}
+        plan = None if builder.empty else builder.build()
+        return {wid: self._finalize_ret_job(now, wid, plan, task_list)}
 
     def _maybe_spec_retrieval(self, now: float):
         """Generation→Retrieval speculation: warm the LocalCache from a
@@ -961,11 +993,12 @@ class WavefrontScheduler:
             if r.gen is None or r.gen.done or r.gen.speculative_src is not None:
                 continue
             node = r.graph.nodes.get(r.current)
-            if node is None or node.kind != "generation":
+            if node is None or not stages.spec_for(node).emits_partial_queries:
                 continue
             nxt = r.graph.successor(r.current, r.state)
-            if not (isinstance(nxt, int) and
-                    isinstance(r.graph.nodes.get(nxt), RetrievalNode)):
+            nxt_node = r.graph.nodes.get(nxt) if isinstance(nxt, int) else None
+            if (nxt_node is None
+                    or not stages.spec_for(nxt_node).accepts_probe_warmup):
                 continue
             ratio = r.gen.generated / max(r.gen.target_tokens, 1)
             if ratio < pol.spec_ret_ratio or self._spec_ret_round.get(r.request_id, -1) == r.round_idx:
@@ -991,8 +1024,9 @@ class WavefrontScheduler:
             if r.ret is None or r.ret.done or r.gen is not None:
                 continue
             nxt = r.graph.successor(r.current, r.state)
-            if not (isinstance(nxt, int) and
-                    isinstance(r.graph.nodes.get(nxt), GenerationNode)):
+            nxt_node = r.graph.nodes.get(nxt) if isinstance(nxt, int) else None
+            if (nxt_node is None
+                    or not stages.spec_for(nxt_node).supports_spec_start):
                 continue
             total = len(r.ret.searched) + len(r.ret.cluster_queue)
             d0 = float(np.sqrt(max(
@@ -1084,7 +1118,8 @@ class WavefrontScheduler:
                 # no work assembled but requests active -> enter stages
                 for r in list(self.active):
                     self._enter_stage(r, now)
-                if not self.active or any(r.gen or r.ret for r in self.active):
+                if not self.active or any(r.gen or r.ret or r.stage
+                                          for r in self.active):
                     return "advanced"
                 raise RuntimeError(
                     f"deadlock: {len(self.active)} active requests, no work")
@@ -1194,39 +1229,49 @@ class WavefrontScheduler:
                 if r.gen.speculative_src is not None:
                     continue  # wait for retrieval validation
                 node = r.graph.nodes.get(r.current)
-                if node is not None and node.kind == "generation":
+                if (node is not None
+                        and stages.spec_for(node).resource == stages.GEN):
                     self._finish_gen_stage(r, now)
 
     def _complete_ret(self, job, now: float) -> None:
         plan = job["plan"]
-        results = job["results_fn"]()  # item-level BatchTopK scoreboard
-        # one vectorized fold: per-group merged top-k + improvement streaks.
-        # Shard-mode partials only need the raw item rows (the gather plan
-        # folds them once, at merge time), so an all-shard job skips the fold
-        res = (plan.finalize(results)
-               if any(m[0] != "shard" for m in plan.group_meta) else None)
-        for g, meta in enumerate(plan.group_meta):
-            kind = meta[0]
-            kg = int(plan.group_k[g])
-            if kind == "ret":
-                _, r, sn, clusters = meta
-                self._apply_ret_result(r, res, g, kg, plan.k, clusters,
-                                       sn, now)
-            elif kind == "shard":
-                # one per-shard partial scan: scatter its item rows into the
-                # gather board (original probe order); the last part to land
-                # triggers the k-way merge
-                _, gather, positions = meta
-                gather_scatter_rows(
-                    gather.board, positions, results,
-                    int(plan.group_start[g]), int(plan.group_start[g + 1]))
-                gather.remaining -= 1
-                if gather.remaining == 0:
-                    self._finish_gather(gather, now)
-            else:  # speculative warmup: results land in the LocalCache
-                _, r, emb, probed = meta
-                if r.sim_cache is None:
-                    r.sim_cache = LocalCache()
-                r.sim_cache.update(emb, res.group_topk(g, kg), self.index,
-                                   probed)
-                self.spec.stats.attempted_ret += 1
+        if plan is not None:
+            results = job["results_fn"]()  # item-level BatchTopK scoreboard
+            # one vectorized fold: per-group merged top-k + improvement
+            # streaks.  Shard-mode partials only need the raw item rows (the
+            # gather plan folds them once, at merge time), so an all-shard
+            # job skips the fold
+            res = (plan.finalize(results)
+                   if any(m[0] != "shard" for m in plan.group_meta) else None)
+            for g, meta in enumerate(plan.group_meta):
+                kind = meta[0]
+                kg = int(plan.group_k[g])
+                if kind == "ret":
+                    _, r, sn, clusters = meta
+                    self._apply_ret_result(r, res, g, kg, plan.k, clusters,
+                                           sn, now)
+                elif kind == "shard":
+                    # one per-shard partial scan: scatter its item rows into
+                    # the gather board (original probe order); the last part
+                    # to land triggers the k-way merge
+                    _, gather, positions = meta
+                    gather_scatter_rows(
+                        gather.board, positions, results,
+                        int(plan.group_start[g]), int(plan.group_start[g + 1]))
+                    gather.remaining -= 1
+                    if gather.remaining == 0:
+                        self._finish_gather(gather, now)
+                elif kind == "stage":
+                    # plan group owned by a registry stage (e.g. one rewrite
+                    # query-variant scan): hand the folded rows to its spec
+                    _, r, sp, ref = meta
+                    sp.complete_plan_group(self, r, ref, res, g, kg, now)
+                else:  # speculative warmup: results land in the LocalCache
+                    _, r, emb, probed = meta
+                    if r.sim_cache is None:
+                        r.sim_cache = LocalCache()
+                    r.sim_cache.update(emb, res.group_topk(g, kg), self.index,
+                                       probed)
+                    self.spec.stats.attempted_ret += 1
+        for task, fn in job.get("tasks", ()):
+            stages.spec(task.kind).complete_task(self, task, fn(), now)

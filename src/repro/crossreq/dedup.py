@@ -37,6 +37,13 @@ A leader stays matchable while its stage is in flight, so duplicates
 arriving a few cycles late still fuse instead of re-scanning.  Fusion runs
 in the hedra sub-stage assembly path only — the coarse async/sequential
 baselines model systems without cross-request coordination.
+
+Matching is keyed on **stage-typed signatures** (core/stages.py FusionSig):
+each registered StageSpec describes its own equivalence class — exact key
+bytes, a parameter bucket, and an optional unit vector for near matching —
+so rerank/rewrite/compress stages dedup through the identical machinery as
+retrieval, and stage kinds never collide (the kind prefixes the key and
+bucket).
 """
 from __future__ import annotations
 
@@ -44,6 +51,8 @@ import dataclasses
 from typing import Optional
 
 import numpy as np
+
+from repro.core.stages import FusionSig
 
 
 @dataclasses.dataclass
@@ -60,12 +69,20 @@ class _Leader:
     rid: int
     req: object
     key: bytes
-    bucket: tuple[int, int]  # (k, nprobe)
-    unit_vec: np.ndarray
+    bucket: tuple  # ("<kind>", *stage params), e.g. ("retrieval", k, nprobe)
+    unit_vec: Optional[np.ndarray]
+
+
+def _retrieval_sig(req) -> FusionSig:
+    """Default signature for a legacy retrieval stage (callers that pass no
+    explicit sig — direct FusionPass use outside the scheduler)."""
+    from repro.core import stages
+
+    return stages.spec("retrieval").fusion_signature(None, req)
 
 
 class FusionPass:
-    """Clusters pending retrieval sub-stages by query similarity and tracks
+    """Clusters pending stage work by signature similarity and tracks
     leader -> subscriber groups while the leader's stage is in flight."""
 
     def __init__(self, threshold: float):
@@ -74,39 +91,35 @@ class FusionPass:
         self.threshold = float(threshold)
         self.stats = FusionStats()
         self._leaders: dict[int, _Leader] = {}  # rid -> leader record
-        self._by_key: dict[bytes, int] = {}  # exact query key -> leader rid
-        # (k, nprobe) -> {rid: unit query vec}; near matches only compare
-        # within a bucket so fused answers keep the subscriber's k/nprobe
-        self._buckets: dict[tuple[int, int], dict[int, np.ndarray]] = {}
+        self._by_key: dict[bytes, int] = {}  # exact stage key -> leader rid
+        # bucket -> {rid: unit query vec}; near matches only compare within
+        # a bucket so fused answers keep the subscriber's stage parameters
+        self._buckets: dict[tuple, dict[int, np.ndarray]] = {}
         self._subs: dict[int, list[tuple[object, str]]] = {}
 
     @property
     def n_inflight_leaders(self) -> int:
         return len(self._leaders)
 
-    @staticmethod
-    def _key(req) -> bytes:
-        r = req.ret
-        return (np.asarray(r.query_vec, np.float32).tobytes()
-                + np.array([r.k, r.nprobe], np.int64).tobytes())
-
     # ---------------------------------------------------------------- matching
-    def try_subscribe(self, req, *, allow_near: bool) -> Optional[str]:
-        """Attach ``req``'s fresh retrieval stage to an in-flight leader.
-        Returns 'exact' / 'near', or None when no leader matches."""
-        key = self._key(req)
-        lead = self._by_key.get(key)
+    def try_subscribe(self, req, sig: Optional[FusionSig] = None, *,
+                      allow_near: bool) -> Optional[str]:
+        """Attach ``req``'s fresh stage to an in-flight leader with the same
+        signature.  Returns 'exact' / 'near', or None when no leader
+        matches."""
+        if sig is None:
+            sig = _retrieval_sig(req)
+        lead = self._by_key.get(sig.key)
         if lead is not None and lead != req.request_id:
             self._subs[lead].append((req, "exact"))
             self.stats.exact_subscribed += 1
             return "exact"
-        if not allow_near or self.threshold >= 1.0:
+        if not allow_near or self.threshold >= 1.0 or sig.unit_vec is None:
             return None
-        bucket = self._buckets.get((req.ret.k, req.ret.nprobe))
+        bucket = self._buckets.get(sig.bucket)
         if not bucket:
             return None
-        q = np.asarray(req.ret.query_vec, np.float64)
-        q = q / max(float(np.linalg.norm(q)), 1e-12)
+        q = np.asarray(sig.unit_vec, np.float64)
         rids = [r for r in bucket if r != req.request_id]
         if not rids:
             return None
@@ -119,19 +132,19 @@ class FusionPass:
         self.stats.near_subscribed += 1
         return "near"
 
-    def register_leader(self, req) -> None:
-        """Make ``req`` the executing leader for its query; later lookalikes
-        subscribe until the stage completes."""
+    def register_leader(self, req, sig: Optional[FusionSig] = None) -> None:
+        """Make ``req`` the executing leader for its signature; later
+        lookalikes subscribe until the stage completes."""
         rid = req.request_id
         if rid in self._leaders:
             return
-        key = self._key(req)
-        q = np.asarray(req.ret.query_vec, np.float64)
-        unit = q / max(float(np.linalg.norm(q)), 1e-12)
-        bucket = (req.ret.k, req.ret.nprobe)
-        self._leaders[rid] = _Leader(rid, req, key, bucket, unit)
-        self._by_key.setdefault(key, rid)
-        self._buckets.setdefault(bucket, {})[rid] = unit
+        if sig is None:
+            sig = _retrieval_sig(req)
+        self._leaders[rid] = _Leader(rid, req, sig.key, sig.bucket,
+                                     sig.unit_vec)
+        self._by_key.setdefault(sig.key, rid)
+        if sig.unit_vec is not None:
+            self._buckets.setdefault(sig.bucket, {})[rid] = sig.unit_vec
         self._subs.setdefault(rid, [])
         self.stats.leaders_registered += 1
 

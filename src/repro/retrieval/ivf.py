@@ -130,14 +130,22 @@ class IVFIndex:
     def cluster_sizes(self) -> np.ndarray:
         return (self.offsets[1:] - self.offsets[:-1]).astype(np.int64)
 
-    def doc_cluster(self, doc_ids: np.ndarray) -> np.ndarray:
-        """Map original doc ids -> owning cluster ids."""
+    def _doc_rows(self, doc_ids) -> np.ndarray:
         if self._row_of_doc is None:
             inv = np.empty(self.ids.shape[0], np.int64)
             inv[self.ids] = np.arange(self.ids.shape[0])
             object.__setattr__(self, "_row_of_doc", inv)
-        rows = self._row_of_doc[np.asarray(doc_ids, np.int64)]
+        return self._row_of_doc[np.asarray(doc_ids, np.int64)]
+
+    def doc_cluster(self, doc_ids: np.ndarray) -> np.ndarray:
+        """Map original doc ids -> owning cluster ids."""
+        rows = self._doc_rows(doc_ids)
         return (np.searchsorted(self.offsets, rows, side="right") - 1).astype(np.int64)
+
+    def doc_vectors(self, doc_ids) -> np.ndarray:
+        """Gather stored vectors by original doc id (rerank/compress stage
+        scoring operates on retrieved candidates, not cluster layout)."""
+        return self.flat[self._doc_rows(doc_ids)]
 
     # ----------------------------------------------------------------- search
     def centroid_dists(self, q: np.ndarray) -> np.ndarray:

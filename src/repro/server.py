@@ -39,7 +39,6 @@ keyword overrides as every other scheduler knob::
 """
 from __future__ import annotations
 
-import itertools
 import json
 import os
 from typing import Iterable, Optional, Union
@@ -49,6 +48,16 @@ from repro.core.ragraph import RAGraph
 from repro.core.runtime import RequestContext
 from repro.core.wavefront import Metrics, SchedulerConfig, WavefrontScheduler
 from repro.serving.workload import WorkloadProfile
+
+
+def _json_safe(payload):
+    """Journal event payloads must round-trip through JSON: native scalars
+    pass through, numpy scalars unwrap, anything structured stringifies."""
+    if payload is None or isinstance(payload, (bool, int, float, str)):
+        return payload
+    if hasattr(payload, "item") and getattr(payload, "ndim", None) == 0:
+        return _json_safe(payload.item())
+    return repr(payload)
 
 
 class Server:
@@ -72,12 +81,31 @@ class Server:
         self.sched = WavefrontScheduler(self.backend, index, self.config,
                                         self.workload)
         self.journal_path = journal_path
-        self._ids = itertools.count()
+        self._next_id = 0
+        # crash recovery is automatic on a journal-backed start: unfinished
+        # rows in an existing journal re-enter the queue with their original
+        # request ids and pre-crash event prefixes
+        self.recovered_ids: list = []
+        if journal_path and os.path.exists(journal_path):
+            self.recovered_ids = self.readmit(
+                self.replay_unfinished(journal_path))
 
     # ------------------------------------------------------------------ API
+    def _alloc_id(self) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        return rid
+
     def _build_request(self, input_text: str, graph: RAGraph,
-                       arrival_us: float) -> RequestContext:
-        rid = next(self._ids)
+                       arrival_us: float,
+                       request_id: Optional[int] = None) -> RequestContext:
+        if request_id is None:
+            rid = self._alloc_id()
+        else:
+            # journal recovery pins the original id; future native ids must
+            # never collide with it
+            rid = int(request_id)
+            self._next_id = max(self._next_id, rid + 1)
         graph.validate()
         state = {"input": input_text,
                  "_target_rounds": self.workload.iterations(rid)}
@@ -195,7 +223,7 @@ class Server:
                 "arrival_us": r.arrival_us,
                 "finished": r.finished,
                 "finish_us": r.finish_us,
-                "events": [(t, e) for t, e, _ in r.events],
+                "events": [(t, e, _json_safe(p)) for t, e, p in r.events],
             })
         tmp = f"{path}.tmp.{os.getpid()}"
         with open(tmp, "w") as f:
@@ -237,16 +265,35 @@ class Server:
         possibly warm, possibly shard-mode — server: each row's workflow is
         rebuilt by name and re-queued at the later of its journaled arrival
         and the current event clock (the virtual clock cannot honor a stamp
-        in its past).  Routing state (shard map, dispatcher, caches) is the
-        live server's own, so recovered requests dispatch exactly like
-        fresh ones.  Returns one new request id per row (``None`` where an
-        enabled admission knob sheds the recovered request)."""
+        in its past).  The row's *original* request id is preserved (so
+        per-request SLO/iteration draws and downstream trace joins survive
+        the restart) unless a live request already holds it — then, and
+        only then, a fresh id is allocated; the journaled partial event log
+        is carried over so the post-restart trace keeps its pre-crash
+        prefix.  Routing state (shard map, dispatcher, caches) is the live
+        server's own, so recovered requests dispatch exactly like fresh
+        ones.  Returns one request id per row (``None`` where an enabled
+        admission knob sheds the recovered request)."""
         from repro import workflows
 
+        live = {r.request_id for r in (self.sched.done + self.sched.active
+                                       + self.sched.pending)}
         ids: list[Optional[int]] = []
         for row in rows:
             graph = workflows.build(row["graph"])
             arrival = max(float(row.get("arrival_us", 0.0)), self.sched.now)
-            ids.append(self.add_request(row.get("input") or "",
-                                        graph, arrival_us=arrival))
+            rid = row.get("request_id")
+            if rid is not None and int(rid) in live:
+                rid = None  # collides with a live request: remap fresh
+            req = self._build_request(row.get("input") or "", graph,
+                                      arrival_us=arrival, request_id=rid)
+            req.events = [
+                (float(ev[0]), ev[1], ev[2] if len(ev) > 2 else None)
+                for ev in row.get("events", ())
+            ]
+            if not self.sched.add_request(req):
+                ids.append(None)
+                continue
+            live.add(req.request_id)
+            ids.append(req.request_id)
         return ids

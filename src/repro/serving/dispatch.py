@@ -244,17 +244,13 @@ def estimate_remaining_us(req, budget, cost_model, sizes,
     ``shard_map``, the retrieval term models shard-mode scatter-gather:
     ``max`` over per-shard partial-scan costs plus a merge term, instead of
     the single-worker sum."""
+    from repro.core import stages
+
+    ctx = stages.CostCtx(budget=budget, cost_model=cost_model, sizes=sizes,
+                         shard_map=shard_map, merge_us=merge_us)
     est = 0.0
-    if req.ret is not None and not req.ret.done and req.ret.cluster_queue:
-        queued = np.asarray(req.ret.cluster_queue, np.int64)
-        if shard_map is None:
-            est += cost_model.batch_cost_us(sizes[queued])
-        else:
-            est += sharded_scan_cost_us(queued, cost_model, sizes,
-                                        shard_map, merge_us)
-    if req.gen is not None and not req.gen.done:
-        remaining = max(req.gen.target_tokens - req.gen.generated, 0)
-        est += remaining * budget.t_decode_step_us
+    for prog, kind in stages.active_progress(req):
+        est += stages.spec(kind).remaining_us(req, prog, ctx)
     return est
 
 
@@ -336,19 +332,22 @@ class AdmissionController:
                               ) if shard_map is not None else 0.0
 
     def lower_bound_us(self, req) -> float:
-        """Cost-model lower bound of serving ``req`` in isolation: one
-        smallest-cluster scan per retrieval node + one decode step per
-        generation node (at the current EMA step cost), single pass.  In
-        shard mode sharding cannot shrink a single smallest-cluster scan
-        (``max`` over one shard == that shard), but every retrieval stage
+        """Cost-model lower bound of serving ``req`` in isolation: each graph
+        node contributes its StageSpec's minimal single-pass service time
+        (one smallest-cluster scan per retrieval node, one decode step per
+        generation node, one fixed+unit slice per host stage).  In shard
+        mode sharding cannot shrink a single smallest-cluster scan (``max``
+        over one shard == that shard), but every retrieval stage
         additionally pays at least one scatter-gather merge."""
-        n_ret = sum(1 for n in req.graph.nodes.values()
-                    if n.kind == "retrieval")
-        n_gen = sum(1 for n in req.graph.nodes.values()
-                    if n.kind == "generation")
-        return (n_ret * (self.cost_model.cost_us(self.min_cluster_size)
-                         + self.merge_us)
-                + n_gen * self.budget.t_decode_step_us)
+        from repro.core import stages
+
+        counts: dict[str, int] = {}
+        for n in req.graph.nodes.values():
+            counts[n.kind] = counts.get(n.kind, 0) + 1
+        total = 0.0
+        for kind in sorted(counts):
+            total += counts[kind] * stages.spec(kind).min_service_us(self)
+        return total
 
     def backlog_us(self, active) -> float:
         """Queueing-delay lower bound seen by a new arrival: the first-order

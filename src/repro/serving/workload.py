@@ -171,4 +171,19 @@ MIXES = {
                  "recomp": 2.0},
         slo_tiers_us={"one-shot": 2.5e6, "recomp": 8e6,
                       "multistep": 12e6, "irg": 12e6}),
+    # the stage-registry mix: the paper five plus the polymorphic stage
+    # workflows (rerank / multiquery / hybrid / compress / pipeline), so the
+    # goodput knee is measured on traffic whose host work is NOT just IVF
+    # scans — cross-encoder blocks, query-variant fans and compression
+    # blocks compete for the same retrieval pool under distinct SLO tiers
+    "heterogeneous": MixSpec(
+        "heterogeneous",
+        weights={"one-shot": 2.0, "hyde": 1.0, "multistep": 1.0,
+                 "irg": 1.0, "recomp": 1.0, "rerank": 2.0,
+                 "multiquery": 2.0, "hybrid": 2.0, "compress": 1.0,
+                 "pipeline": 1.0},
+        slo_tiers_us={"one-shot": 2.5e6, "hyde": 4e6, "recomp": 6e6,
+                      "multistep": 10e6, "irg": 10e6, "rerank": 4e6,
+                      "multiquery": 5e6, "hybrid": 3e6, "compress": 6e6,
+                      "pipeline": 12e6}),
 }

@@ -1,10 +1,21 @@
-"""The paper's five evaluation workflows as RAGraphs (§6.1).
+"""The paper's five evaluation workflows as RAGraphs (§6.1), plus the
+stage-registry workflows built from the polymorphic stage kinds.
+
+Paper five:
 
   one-shot   retrieve -> generate
   multistep  decompose -> [retrieve -> answer] x subquestions (conditional loop)
   irg        [generate -> retrieve] x N iterative retrieval-generation
   hyde       hypothesis-generate -> retrieve(with hypothesis) -> answer
-  recomp     retrieve -> compress -> answer (post-retrieval stage)
+  recomp     retrieve -> compress(as generation) -> answer
+
+Registry workflows (core/stages.py kinds as first-class graph stages):
+
+  rerank      retrieve wide -> cross-encoder rerank -> generate
+  multiquery  rewrite (N query variants, k-way merged) -> generate
+  hybrid      dense+lexical retrieval (rrf fusion) -> generate
+  compress    retrieve wide -> extractive compress -> generate
+  pipeline    rewrite -> rerank -> compress -> generate (all four host kinds)
 
 The conditional loops terminate through per-request state counters, which is
 how the paper's Listing 1 lambda edges resolve at runtime.  ``max_rounds``
@@ -92,12 +103,85 @@ def irg(topk: int = 5) -> RAGraph:
     return g
 
 
+def rerank(topk: int = 24, keep: int = 5) -> RAGraph:
+    """Retrieve a wide candidate set, cross-encoder rerank, answer."""
+    g = RAGraph("rerank")
+    g.add_retrieval(0, query="input", output="cands", topk=topk)
+    g.add_rerank(1, docs="cands", output="docs", keep=keep)
+    g.add_generation(2, prompt="Answer {input} using {docs}.", output="answer")
+    g.add_edge(START, 0)
+    g.add_edge(0, 1)
+    g.add_edge(1, 2)
+    g.add_edge(2, END)
+    return g
+
+
+def multiquery(n_queries: int = 3, topk: int = 5) -> RAGraph:
+    """Multi-query expansion: N variant searches, k-way merged."""
+    g = RAGraph("multiquery")
+    g.add_rewrite(0, query="input", output="docs", n_queries=n_queries,
+                  topk=topk)
+    g.add_generation(1, prompt="Answer {input} using {docs}.", output="answer")
+    g.add_edge(START, 0)
+    g.add_edge(0, 1)
+    g.add_edge(1, END)
+    return g
+
+
+def hybrid(topk: int = 8, lexical_weight: float = 0.5) -> RAGraph:
+    """Dense+lexical hybrid retrieval with reciprocal-rank fusion."""
+    g = RAGraph("hybrid")
+    g.add_retrieval(0, query="input", output="docs", topk=topk,
+                    lexical_weight=lexical_weight)
+    g.add_generation(1, prompt="Answer {input} using {docs}.", output="answer")
+    g.add_edge(START, 0)
+    g.add_edge(0, 1)
+    g.add_edge(1, END)
+    return g
+
+
+def compress(topk: int = 16, ratio: float = 0.5) -> RAGraph:
+    """Retrieve wide, extractively compress the context, answer."""
+    g = RAGraph("compress")
+    g.add_retrieval(0, query="input", output="cands", topk=topk)
+    g.add_compress(1, docs="cands", output="docs", ratio=ratio)
+    g.add_generation(2, prompt="Answer {input} using {docs}.", output="answer")
+    g.add_edge(START, 0)
+    g.add_edge(0, 1)
+    g.add_edge(1, 2)
+    g.add_edge(2, END)
+    return g
+
+
+def pipeline(n_queries: int = 3, topk: int = 12, keep: int = 8,
+             ratio: float = 0.5) -> RAGraph:
+    """Every host stage kind in one chain: rewrite -> rerank -> compress ->
+    generate (the stress workflow for the heterogeneous mix)."""
+    g = RAGraph("pipeline")
+    g.add_rewrite(0, query="input", output="cands", n_queries=n_queries,
+                  topk=topk)
+    g.add_rerank(1, docs="cands", output="picked", keep=keep)
+    g.add_compress(2, docs="picked", output="docs", ratio=ratio)
+    g.add_generation(3, prompt="Answer {input} using {docs}.", output="answer")
+    g.add_edge(START, 0)
+    g.add_edge(0, 1)
+    g.add_edge(1, 2)
+    g.add_edge(2, 3)
+    g.add_edge(3, END)
+    return g
+
+
 WORKFLOWS = {
     "one-shot": one_shot,
     "hyde": hyde,
     "recomp": recomp,
     "multistep": multistep,
     "irg": irg,
+    "rerank": rerank,
+    "multiquery": multiquery,
+    "hybrid": hybrid,
+    "compress": compress,
+    "pipeline": pipeline,
 }
 
 

@@ -172,11 +172,18 @@ def test_sharded_serving_matches_whole_index(small_index, embedder, mix_name):
             assert m.shard_scatters > 0 and m.shard_merges > 0
             assert m.shard_parts >= m.shard_scatters
         # merged top-k == full-search oracle for the final retrieval round
+        # — only where "docs" comes straight from a pure dense retrieval
+        # node (hybrid fusion and registry stages rescore/filter it, and
+        # multiquery has no retrieval node at all; those classes are still
+        # covered by the shard-vs-whole-index equality above)
         for r in s.sched.done:
             if r.round_idx == 0 or "docs" not in r.state:
                 continue
-            node = next(n for n in r.graph.nodes.values()
-                        if n.kind == "retrieval")
+            node = next((n for n in r.graph.nodes.values()
+                         if n.kind == "retrieval" and n.output == "docs"
+                         and n.lexical_weight == 0.0), None)
+            if node is None:
+                continue
             qv = embedder.embed_query(r.request_id, r.round_idx - 1)
             _, ids = small_index.search(qv[None], 12, node.topk or 5)
             assert r.state["docs"] == [int(i) for i in ids[0] if i >= 0]
@@ -345,19 +352,23 @@ def test_journal_replay_readmits_into_warm_sharded_server(tmp_path,
     assert m2.shard_scatters > 0  # recovered requests scatter like fresh ones
     rep = s2.shard_report()
     assert rep["n_shards"] == 2
-    # re-admissions honored the warm clock: no event precedes re-admission
-    for r in s2.sched.done:
-        if r.request_id == 0:
-            continue
-        assert all(t >= 1000.0 for t, _, _ in r.events)
-    # recovered requests produce the same retrieval results as the cut run
-    # would have: spot-check against the full-search oracle
+    # re-admissions honored the warm clock: beyond the carried pre-crash
+    # event prefix, no post-restart event precedes re-admission
     done_by_input = {r.state["input"]: r for r in s2.sched.done}
     for row in rows:
         r = done_by_input[row["input"]]
+        assert all(t >= 1000.0 for t, _, _ in r.events[len(row["events"]):])
+    # recovered requests produce the same retrieval results as the cut run
+    # would have: spot-check against the full-search oracle (pure dense
+    # retrieval classes only — hybrid/registry stages rescore "docs")
+    for row in rows:
+        r = done_by_input[row["input"]]
         if "docs" in r.state and r.round_idx > 0:
-            node = next(n for n in r.graph.nodes.values()
-                        if n.kind == "retrieval")
+            node = next((n for n in r.graph.nodes.values()
+                         if n.kind == "retrieval" and n.output == "docs"
+                         and n.lexical_weight == 0.0), None)
+            if node is None:
+                continue
             qv = embedder.embed_query(r.request_id, r.round_idx - 1)
             _, ids_ref = small_index.search(qv[None], 12, node.topk or 5)
             assert r.state["docs"] == [int(i) for i in ids_ref[0] if i >= 0]

@@ -1,0 +1,180 @@
+"""Property suite for the stage registry: random workflow graphs composed
+from every registered stage kind round-trip through the scheduler's
+split/merge machinery with their declared inputs/outputs respected, and the
+generic Eq.(1) unit-sizing rule partitions any work queue losslessly.
+
+Runs under hypothesis when it is installed (CI installs it explicitly);
+otherwise falls back to a fixed seeded sweep of the same properties so the
+suite never silently skips."""
+import numpy as np
+import pytest
+
+from repro import workflows
+from repro.core import stages
+from repro.core.backends import SimBackend
+from repro.core.ragraph import END, START, RAGraph
+from repro.core.substage import TimeBudget
+from repro.retrieval.ivf import ClusterCostModel
+from repro.server import Server
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # local envs without hypothesis: seeded sweep instead
+    HAVE_HYPOTHESIS = False
+
+RET_HEAVY = ClusterCostModel(fixed_us=150.0, per_vector_us=8.0,
+                             per_query_us=2.0)
+FALLBACK_SEEDS = list(range(24))
+
+
+def _property(n_examples):
+    """Decorator: hypothesis-driven seeds when available, a fixed
+    parametrized sweep otherwise.  The wrapped test takes ``seed`` last."""
+    if HAVE_HYPOTHESIS:
+        return lambda fn: settings(
+            max_examples=n_examples, deadline=None,
+            suppress_health_check=[HealthCheck.too_slow],
+        )(given(seed=st.integers(0, 2**32 - 1))(fn))
+    return lambda fn: pytest.mark.parametrize(
+        "seed", FALLBACK_SEEDS[:n_examples])(fn)
+
+
+# ---------------------------------------------------------------------------
+# Eq.(1) unit sizing: lossless in-order partition of any stage work queue
+# ---------------------------------------------------------------------------
+
+
+@_property(60)
+def test_units_for_budget_partitions_queue(seed):
+    rng = np.random.default_rng(seed)
+    budget = TimeBudget(beta_us=float(rng.uniform(10.0, 500.0)),
+                        t_retrieval_us=float(rng.uniform(500.0, 60_000.0)))
+    costs = [float(c) for c in rng.uniform(1.0, 4000.0,
+                                           size=int(rng.integers(0, 40)))]
+    queue = list(costs)
+    chunks = []
+    while queue:
+        n = budget.units_for_budget(queue)
+        assert n >= 1  # progress is always guaranteed
+        chunks.append(queue[:n])
+        queue = queue[n:]
+    # split is a lossless in-order partition (merge == concatenation)
+    assert [c for ch in chunks for c in ch] == costs
+    mb = budget.mb_us
+    for i, ch in enumerate(chunks):
+        used = ch[0]
+        for c in ch[1:]:  # units beyond the first fit the budget...
+            assert used + c <= mb
+            used += c
+        if i + 1 < len(chunks):  # ...and each chunk is maximal
+            assert used + chunks[i + 1][0] > mb
+
+
+# ---------------------------------------------------------------------------
+# Random stage graphs round-trip through the scheduler
+# ---------------------------------------------------------------------------
+
+
+def _random_graph(rng) -> RAGraph:
+    """A random linear workflow over all registered kinds whose dataflow is
+    valid by construction: doc-consuming stages (rerank/compress) only
+    appear once some stage has produced a doc list."""
+    g = RAGraph("random")
+    text_keys = ["input"]  # embeddable query sources
+    doc_keys = []  # doc-id list outputs
+    n_mid = int(rng.integers(1, 5))
+    nid = 0
+    for _ in range(n_mid):
+        choices = ["retrieval", "rewrite", "generation"]
+        if doc_keys:
+            choices += ["rerank", "compress"]
+        kind = choices[int(rng.integers(len(choices)))]
+        out = f"k{nid}"
+        if kind == "retrieval":
+            g.add_retrieval(nid, query=text_keys[int(rng.integers(
+                len(text_keys)))], output=out,
+                topk=int(rng.integers(3, 12)),
+                lexical_weight=float(rng.choice([0.0, 0.5])))
+            doc_keys.append(out)
+        elif kind == "rewrite":
+            g.add_rewrite(nid, query=text_keys[int(rng.integers(
+                len(text_keys)))], output=out,
+                n_queries=int(rng.integers(2, 4)),
+                topk=int(rng.integers(3, 8)))
+            doc_keys.append(out)
+        elif kind == "rerank":
+            g.add_rerank(nid, docs=doc_keys[int(rng.integers(
+                len(doc_keys)))], output=out,
+                keep=int(rng.integers(1, 6)),
+                block=int(rng.integers(2, 6)))
+            doc_keys.append(out)
+        elif kind == "compress":
+            g.add_compress(nid, docs=doc_keys[int(rng.integers(
+                len(doc_keys)))], output=out,
+                ratio=float(rng.uniform(0.2, 0.9)),
+                block=int(rng.integers(2, 6)))
+            doc_keys.append(out)
+        else:
+            src = (text_keys + doc_keys)[int(rng.integers(
+                len(text_keys) + len(doc_keys)))]
+            g.add_generation(nid, prompt=f"Expand {{{src}}}.", output=out,
+                             max_tokens=32)
+            text_keys.append(out)
+        g.add_edge(START if nid == 0 else nid - 1, nid)
+        nid += 1
+    final_src = doc_keys[int(rng.integers(len(doc_keys)))] if doc_keys \
+        else text_keys[-1]
+    g.add_generation(nid, prompt=f"Answer {{input}} using {{{final_src}}}.",
+                     output="answer", max_tokens=32)
+    g.add_edge(nid - 1, nid)
+    g.add_edge(nid, END)
+    return g
+
+
+@_property(20)
+def test_random_stage_graphs_roundtrip(small_index, embedder, seed):
+    rng = np.random.default_rng(seed)
+    g = _random_graph(rng)
+    g.validate()  # valid-by-construction graphs must pass validation
+    mode = ["hedra", "async", "sequential"][int(rng.integers(3))]
+    be = SimBackend(small_index, embedder, cost_model=RET_HEAVY, seed=0)
+    s = Server(small_index, embedder, mode=mode, backend=be, nprobe=8,
+               topk=5)
+    n = 3
+    for i in range(n):
+        s.add_request(f"q{i}", g, arrival_us=float(i) * 1e4)
+    m = s.run()
+    assert m.finished == n, f"{mode} finished {m.finished} of {n}"
+    host_kinds = {"rerank", "rewrite", "compress"}
+    graph_host = {nd.kind for nd in g.nodes.values()} & host_kinds
+    for r in s.sched.done:
+        # every node's declared output materialised in the final state
+        for nd in g.nodes.values():
+            assert nd.output in r.state, (nd.kind, nd.output)
+            if nd.kind in ("retrieval", "rewrite", "rerank", "compress"):
+                docs = r.state[nd.output]
+                assert docs and all(isinstance(d, int) for d in docs)
+        assert r.state["answer"]
+        # host registry stages really entered the split/merge machinery
+        entered = {e.split("_stage_start")[0] for _, e, _p in r.events
+                   if e.endswith("_stage_start")}
+        assert graph_host <= entered
+
+
+@_property(20)
+def test_random_graph_validation_catches_broken_dataflow(seed):
+    """Breaking a valid random graph (dangling read) must be rejected."""
+    rng = np.random.default_rng(seed)
+    g = _random_graph(rng)
+    bad = RAGraph("broken")
+    bad.nodes = dict(g.nodes)
+    bad.edges = {k: list(v) for k, v in g.edges.items()}
+    bad.add_generation(999, prompt="Use {never_produced}.", output="x")
+    last = max(n for n in g.nodes)
+    bad.edges[last] = [999]
+    bad.add_edge(999, END)
+    with pytest.raises(ValueError, match="never_produced"):
+        bad.validate()

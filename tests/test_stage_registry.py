@@ -1,0 +1,407 @@
+"""Stage-registry behaviour (core/stages.py): golden fingerprint identity
+on the paper five, registry dispatch semantics, graph validation, the new
+stage workflows end-to-end, and journal-backed crash recovery."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import workflows
+from repro.core import stages
+from repro.core.backends import SimBackend
+from repro.core.ragraph import END, START, RAGraph
+from repro.retrieval.ivf import ClusterCostModel
+from repro.server import Server
+from repro.serving.workload import MIXES, poisson_arrivals
+
+PAPER_FIVE = ["one-shot", "hyde", "irg", "multistep", "recomp"]
+STAGE_FIVE = ["rerank", "multiquery", "hybrid", "compress", "pipeline"]
+MODES = ["sequential", "async", "hedra"]
+
+# the golden-fingerprint fixture (scripts/make_golden_fingerprints.py)
+RET_HEAVY = ClusterCostModel(fixed_us=150.0, per_vector_us=8.0,
+                             per_query_us=2.0)
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__),
+                           "golden_fingerprints.json")
+
+
+# ---------------------------------------------------------------------------
+# Golden fingerprints: the refactor must not move a single event
+# ---------------------------------------------------------------------------
+
+
+def _trace_hash(server) -> str:
+    import hashlib
+
+    fp = {
+        r.request_id: [(float(t), e, repr(p)) for t, e, p in r.events]
+        for r in server.sched.done
+    }
+    return hashlib.sha256(json.dumps(fp, sort_keys=True).encode()).hexdigest()
+
+
+@pytest.mark.parametrize("num_ret_workers", [1, 4])
+@pytest.mark.parametrize("mode", MODES)
+def test_paper_workflow_fingerprints_bit_identical(small_index, embedder,
+                                                   mode, num_ret_workers):
+    """Per-request event traces of the five paper workflows are pinned:
+    any stage/scheduler refactor must reproduce the goldens bit-for-bit
+    for graphs built only from the original two node kinds."""
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    be = SimBackend(small_index, embedder, cost_model=RET_HEAVY, seed=0)
+    s = Server(small_index, embedder, mode=mode, backend=be, nprobe=12,
+               topk=5, num_ret_workers=num_ret_workers)
+    for i, t in enumerate(poisson_arrivals(8.0, 20, seed=5)):
+        s.add_request(f"q{i}", workflows.build(PAPER_FIVE[i % 5]),
+                      arrival_us=float(t))
+    m = s.run()
+    assert m.finished == 20
+    assert _trace_hash(s) == golden[f"{mode}-nw{num_ret_workers}"]
+
+
+# ---------------------------------------------------------------------------
+# Registry dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_registry_covers_every_node_kind():
+    assert set(stages.STAGE_REGISTRY) == {
+        "generation", "retrieval", "rerank", "rewrite", "compress"}
+    for name in PAPER_FIVE + STAGE_FIVE:
+        g = workflows.build(name)
+        for node in g.nodes.values():
+            sp = stages.spec_for(node)
+            assert sp.kind == node.kind
+            assert sp is stages.spec(node.kind)
+
+
+def test_unknown_kind_raises_actionable_keyerror():
+    with pytest.raises(KeyError, match="bm25.*known kinds.*register_stage"):
+        stages.spec("bm25")
+
+
+def test_capability_flags_replace_kind_branches():
+    gen = stages.spec("generation")
+    assert gen.resource == stages.GEN
+    assert gen.splittable and gen.emits_partial_queries
+    assert gen.supports_spec_start and not gen.accepts_probe_warmup
+    ret = stages.spec("retrieval")
+    assert ret.resource == stages.HOST
+    assert ret.splittable and ret.accepts_probe_warmup
+    assert not ret.emits_partial_queries and not ret.supports_spec_start
+    for kind in ("rerank", "rewrite", "compress"):
+        sp = stages.spec(kind)
+        assert sp.resource == stages.HOST and sp.splittable
+        assert not sp.emits_partial_queries
+        assert not sp.accepts_probe_warmup
+        assert not sp.supports_spec_start
+
+
+def test_host_stage_cost_profiles_feed_admission():
+    """Admission's per-kind lower bound comes from the registered cost
+    profile — positive, and at least the fixed cost plus one unit."""
+    for kind in ("rerank", "compress"):
+        sp = stages.spec(kind)
+        lb = sp.min_service_us(None)
+        assert lb == sp.profile.fixed_us + sp.profile.unit_us > 0.0
+
+
+def test_exact_fusion_dedups_identical_stage_requests(small_index, embedder):
+    """Duplicate rerank-workflow requests arriving together fuse at *both*
+    stages: the retrieval wave fuses on the query signature, and the rerank
+    wave fuses on the registry's exact (qv, candidates, keep) signature —
+    every request still finishes with the same doc list."""
+    from repro.retrieval.synthetic import DuplicateTrafficEmbedder
+
+    demb = DuplicateTrafficEmbedder(embedder, dup_ratio=1.0, pool_size=1)
+    be = SimBackend(small_index, demb, cost_model=RET_HEAVY, seed=0)
+    s = Server(small_index, demb, mode="hedra", backend=be,
+               dedup_threshold=1.0)  # exact-only
+    for i in range(6):
+        s.add_request(f"q{i}", workflows.build("rerank"), arrival_us=0.0)
+    m = s.run()
+    assert m.finished == 6
+    # more fusions than the single retrieval wave can account for means the
+    # rerank stage's own signature fused too
+    assert m.dedup_exact > 5
+    outs = [tuple(r.state["docs"]) for r in s.sched.done]
+    assert len(set(outs)) == 1
+
+
+def test_host_stage_fusion_is_exact_only():
+    """Rerank signatures carry no unit vector, so near-match (cosine)
+    fusion is structurally impossible for them — only byte-exact keys
+    fuse, even at a permissive threshold."""
+    import dataclasses as dc
+
+    from repro.core.ragraph import RerankNode
+    from repro.core.runtime import StageProgress
+    from repro.crossreq.dedup import FusionPass
+
+    def make_req(rid, qv, cands):
+        req = type("Req", (), {})()
+        req.request_id = rid
+        req.node = RerankNode(1, docs="cands", keep=5)
+        req.state = {"cands": list(cands)}
+        req.stage = StageProgress(kind="rerank", work_queue=[list(cands)],
+                                  total_units=1,
+                                  payload={"qv": np.asarray(qv, np.float32)})
+        return req
+
+    sp = stages.spec("rerank")
+    qv = np.arange(4, dtype=np.float32)
+    lead = make_req(0, qv, [3, 1, 2])
+    sig = sp.fusion_signature(None, lead)
+    assert sig.unit_vec is None and sig.bucket[0] == "rerank"
+    pool = FusionPass(threshold=0.5)  # permissive near threshold
+    pool.register_leader(lead, sig)
+    # byte-identical stage -> exact subscribe
+    twin = make_req(1, qv, [3, 1, 2])
+    assert pool.try_subscribe(twin, sp.fusion_signature(None, twin),
+                              allow_near=True) == "exact"
+    # nearly identical query vector, same candidates -> NO near fallback
+    near = make_req(2, qv + 1e-4, [3, 1, 2])
+    assert pool.try_subscribe(near, sp.fusion_signature(None, near),
+                              allow_near=True) is None
+    # different candidate order -> different key
+    perm = make_req(3, qv, [1, 2, 3])
+    assert pool.try_subscribe(perm, sp.fusion_signature(None, perm),
+                              allow_near=True) is None
+
+
+# ---------------------------------------------------------------------------
+# Graph validation (Server admission rejects malformed graphs)
+# ---------------------------------------------------------------------------
+
+
+def test_validate_rejects_missing_start_edge():
+    g = RAGraph("bad")
+    g.add_generation(0, prompt="Answer {input}.")
+    g.add_edge(0, END)
+    with pytest.raises(ValueError, match="missing START edge"):
+        g.validate()
+
+
+def test_validate_rejects_edge_to_unknown_node():
+    g = RAGraph("bad")
+    g.add_generation(0, prompt="Answer {input}.")
+    g.add_edge(START, 0)
+    g.add_edge(0, 7)
+    with pytest.raises(ValueError, match="edge to unknown node 7"):
+        g.validate()
+
+
+def test_validate_rejects_unreachable_node():
+    g = RAGraph("bad")
+    g.add_generation(0, prompt="Answer {input}.")
+    g.add_retrieval(1, query="input", output="docs")
+    g.add_edge(START, 0)
+    g.add_edge(0, END)
+    g.add_edge(1, END)
+    with pytest.raises(ValueError, match=r"nodes \[1\] unreachable"):
+        g.validate()
+
+
+def test_validate_rejects_dangling_node():
+    g = RAGraph("bad")
+    g.add_retrieval(0, query="input", output="docs")
+    g.add_generation(1, prompt="Answer {input} using {docs}.")
+    g.add_edge(START, 0)
+    g.add_edge(0, 1)  # node 1 has no onward edge
+    with pytest.raises(ValueError, match=r"nodes \[1\] have no outgoing"):
+        g.validate()
+
+
+def test_validate_rejects_unknown_template_input():
+    g = RAGraph("bad")
+    g.add_generation(0, prompt="Answer {input} using {context}.")
+    g.add_edge(START, 0)
+    g.add_edge(0, END)
+    with pytest.raises(ValueError, match="reads 'context'.*no node produces"):
+        g.validate()
+
+
+def test_validate_accepts_listing1_query_alias():
+    g = RAGraph("ok")
+    g.add_retrieval(0, query="input", output="docs")
+    g.add_generation(1, prompt="Answer {query} using {docs}.")
+    g.add_edge(START, 0)
+    g.add_edge(0, 1)
+    g.add_edge(1, END)
+    g.validate()
+
+
+def test_server_admission_runs_validate(small_index, embedder):
+    g = RAGraph("bad")
+    g.add_generation(0, prompt="Answer {nope}.")
+    g.add_edge(START, 0)
+    g.add_edge(0, END)
+    s = Server(small_index, embedder, mode="hedra",
+               backend=SimBackend(small_index, embedder))
+    with pytest.raises(ValueError, match="no node produces"):
+        s.add_request("q", g)
+
+
+# ---------------------------------------------------------------------------
+# New stage workflows end-to-end
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("name", STAGE_FIVE)
+def test_stage_workflows_complete_all_modes(small_index, embedder, mode,
+                                            name):
+    be = SimBackend(small_index, embedder, cost_model=RET_HEAVY, seed=0)
+    s = Server(small_index, embedder, mode=mode, backend=be, nprobe=12,
+               topk=5)
+    for i, t in enumerate(poisson_arrivals(6.0, 6, seed=4)):
+        s.add_request(f"q{i}", workflows.build(name), arrival_us=float(t))
+    m = s.run()
+    assert m.finished == 6, f"{name}/{mode} finished {m.finished}"
+    for r in s.sched.done:
+        assert r.state.get("answer")
+
+
+def test_rerank_keeps_subset_of_candidates(small_index, embedder):
+    be = SimBackend(small_index, embedder, cost_model=RET_HEAVY, seed=0)
+    s = Server(small_index, embedder, mode="hedra", backend=be)
+    s.add_request("q0", workflows.build("rerank", topk=24, keep=5))
+    m = s.run()
+    assert m.finished == 1
+    r = s.sched.done[0]
+    assert len(r.state["docs"]) == 5
+    assert set(r.state["docs"]) <= set(r.state["cands"])
+    assert m.stage_tasks > 0
+
+
+def test_compress_ratio_bounds_kept_context(small_index, embedder):
+    be = SimBackend(small_index, embedder, cost_model=RET_HEAVY, seed=0)
+    s = Server(small_index, embedder, mode="hedra", backend=be)
+    s.add_request("q0", workflows.build("compress", topk=16, ratio=0.25))
+    m = s.run()
+    assert m.finished == 1
+    r = s.sched.done[0]
+    assert len(r.state["docs"]) == max(1, round(len(r.state["cands"]) * 0.25))
+    assert set(r.state["docs"]) <= set(r.state["cands"])
+
+
+def test_hybrid_lexical_fusion_rescores(small_index, embedder):
+    """lexical_weight > 0 must engage the rrf rescoring path; weight 0 must
+    stay bit-identical to the pure dense stage."""
+    be = SimBackend(small_index, embedder, cost_model=RET_HEAVY, seed=0)
+    s = Server(small_index, embedder, mode="hedra", backend=be)
+    s.add_request("q0", workflows.build("hybrid", lexical_weight=0.5))
+    m = s.run()
+    assert m.finished == 1
+    assert m.lexical_fusions == 1
+    be2 = SimBackend(small_index, embedder, cost_model=RET_HEAVY, seed=0)
+    s2 = Server(small_index, embedder, mode="hedra", backend=be2)
+    s2.add_request("q0", workflows.build("hybrid", lexical_weight=0.0))
+    m2 = s2.run()
+    assert m2.lexical_fusions == 0
+
+
+def test_multiquery_merges_variant_topk(small_index, embedder):
+    be = SimBackend(small_index, embedder, cost_model=RET_HEAVY, seed=0)
+    s = Server(small_index, embedder, mode="hedra", backend=be)
+    s.add_request("q0", workflows.build("multiquery", n_queries=3, topk=5))
+    m = s.run()
+    assert m.finished == 1
+    docs = s.sched.done[0].state["docs"]
+    assert len(docs) == len(set(docs))  # k-way merge deduplicates
+    assert len(docs) >= 5  # variants contribute beyond a single top-k
+
+
+def test_heterogeneous_mix_serves_end_to_end(small_index, embedder):
+    mix = MIXES["heterogeneous"]
+    be = SimBackend(small_index, embedder, cost_model=RET_HEAVY, seed=0)
+    s = Server(small_index, embedder, mode="hedra", backend=be, nprobe=12,
+               topk=5, workload=mix.profile())
+    m = s.serve(mix.sample(40, 8.0))
+    assert m.finished == 40
+    assert m.stage_tasks > 0  # registry host stages actually dispatched
+    assert m.lexical_fusions > 0  # hybrid class engaged its fusion path
+    assert m.summary()["slo_violations"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Journal recovery: ids and event prefixes survive a restart
+# ---------------------------------------------------------------------------
+
+
+def _crashy_run(tmp_path, index, emb, journal="journal.jsonl"):
+    """A run cut off mid-flight: journal holds a mix of done/undone rows."""
+    p = str(tmp_path / journal)
+    be = SimBackend(index, emb, cost_model=RET_HEAVY, seed=0)
+    s = Server(index, emb, mode="hedra", backend=be, journal_path=p)
+    names = PAPER_FIVE + STAGE_FIVE
+    for i, t in enumerate(poisson_arrivals(8.0, 10, seed=9)):
+        s.add_request(f"q{i}", workflows.build(names[i % len(names)]),
+                      arrival_us=float(t))
+    m = s.run(max_time_us=1.2e6)
+    assert 0 < m.finished < 10, "cutoff must leave a mix of done/undone"
+    return p, s
+
+
+def test_restart_recovers_unfinished_with_original_ids(tmp_path, small_index,
+                                                       embedder):
+    p, s1 = _crashy_run(tmp_path, small_index, embedder)
+    unfinished = Server.replay_unfinished(p)
+    expect_ids = {row["request_id"] for row in unfinished}
+    assert expect_ids
+    # journal-backed construction re-admits automatically
+    s2 = Server(small_index, embedder, mode="hedra",
+                backend=SimBackend(small_index, embedder,
+                                   cost_model=RET_HEAVY, seed=0),
+                journal_path=p)
+    assert set(s2.recovered_ids) == expect_ids  # original ids preserved
+    # pre-crash event prefixes carried over
+    live = {r.request_id: r for r in s2.sched.active + s2.sched.pending}
+    for row in unfinished:
+        req = live[row["request_id"]]
+        assert [list(ev) for ev in req.events] == \
+            [list(ev) for ev in row["events"]]
+    m2 = s2.run()
+    assert m2.finished == len(unfinished)
+    # the post-restart trace keeps its pre-crash prefix
+    by_id = {r.request_id: r for r in s2.sched.done}
+    for row in unfinished:
+        if not row["events"]:
+            continue
+        got = by_id[row["request_id"]].events
+        assert list(got[0]) == list(row["events"][0])
+    # fresh admissions never collide with recovered ids
+    rid = s2.add_request("fresh", workflows.build("one-shot"))
+    assert rid not in expect_ids
+
+
+def test_readmit_remaps_only_on_live_collision(tmp_path, small_index,
+                                               embedder):
+    p, _ = _crashy_run(tmp_path, small_index, embedder)
+    unfinished = Server.replay_unfinished(p)
+    row = unfinished[0]
+    s2 = Server(small_index, embedder, mode="hedra",
+                backend=SimBackend(small_index, embedder,
+                                   cost_model=RET_HEAVY, seed=0))
+    # occupy the row's original id with a live request
+    taken = None
+    while taken != row["request_id"]:
+        taken = s2.add_request("occupier", workflows.build("one-shot"))
+        assert taken is not None and taken <= row["request_id"]
+    ids = s2.readmit([row])
+    assert len(ids) == 1 and ids[0] is not None
+    assert ids[0] != row["request_id"]  # collision: remapped fresh
+    m = s2.run()
+    assert m.finished == row["request_id"] + 2
+
+
+def test_finished_rows_are_never_readmitted(tmp_path, small_index, embedder):
+    p, s1 = _crashy_run(tmp_path, small_index, embedder)
+    done_ids = {r.request_id for r in s1.sched.done}
+    s2 = Server(small_index, embedder, mode="hedra",
+                backend=SimBackend(small_index, embedder,
+                                   cost_model=RET_HEAVY, seed=0),
+                journal_path=p)
+    assert not (set(s2.recovered_ids) & done_ids)

@@ -124,7 +124,7 @@ def test_journal_roundtrip_with_midrun_completion(tmp_path, small_index, embedde
         assert row["finished"] == (rid in done_ids)
         if row["finished"]:
             assert row["finish_us"] >= 0
-            assert any(e == "ret_stage_start" for _, e in row["events"])
+            assert any(e == "ret_stage_start" for _, e, _p in row["events"])
         assert row["input"] == f"q{rid}"
         assert row["graph"] in NAMES
     unfinished = Server.replay_unfinished(p)
