@@ -1,0 +1,115 @@
+"""Goodput under injected faults: crash rate x stall rate, hedging on/off.
+
+The fault-tolerance sweep for the robustness PR: a 4-worker pool serving
+the retrieval-heavy streaming mix near its saturation knee, with seeded
+``FaultPlan``s injecting worker crashes (fraction of the pool killed
+mid-run), heartbeat-pausing stall windows, and transient per-dispatch
+failures.  Reported per point:
+
+* streamed goodput (finished-under-SLO per second, warmup excluded) and
+  p95 latency — the serving cost of losing workers / absorbing stalls;
+* the recovery counters (re-dispatches, retries, hedged wins, failovers,
+  degraded completions) — *how* the pool survived;
+* hedging on vs off at the same fault point — what duplicate dispatch of
+  SUSPECT stragglers buys (fewer timeouts turning into degraded results).
+
+The liveness bar: every submitted request terminates (finished or shed) at
+every fault point — a hang would deadlock the sweep, so completing it *is*
+the check.
+
+Standalone: ``python benchmarks/bench_faults.py --quick [--json out.json]``
+(the CI smoke job); also runs via ``benchmarks/run.py --only faults``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import emit, fixture, make_server  # noqa: E402
+from repro.serving.faults import FaultPlan  # noqa: E402
+from repro.serving.workload import MIXES  # noqa: E402
+
+KNEE_RATE = 40.0
+MAX_PENDING = 48
+NW = 4
+
+
+def _serve_point(index, embedder, *, plan, hedge: bool, n: int,
+                 sharding: bool = False):
+    mix = MIXES["retrieval-heavy"]
+    s = make_server(index, embedder, "hedra",
+                    workload=mix.profile(), num_ret_workers=NW,
+                    index_sharding=sharding, max_pending=MAX_PENDING,
+                    admission_control=True, fault_plan=plan,
+                    hedge_suspect=hedge)
+    items = mix.sample(n, KNEE_RATE)
+    m = s.serve(items)
+    assert not s.sched.active and not s.sched.pending, "fault sweep hung"
+    warmup = 0.2 * items[-1].arrival_us
+    end = max((f[0] for f in m.finish_log), default=warmup) + 1.0
+    return s, m, m.window_summary(warmup, end)
+
+
+def run(quick: bool = True) -> None:
+    n = 50 if quick else 160
+    index, embedder = fixture()
+    horizon = 1.5e6 * (n / 50.0)  # faults land inside the serve window
+    crash_fracs = [0.0, 0.25] if quick else [0.0, 0.25, 0.5]
+    stall_rates = [0.0, 1.0] if quick else [0.0, 1.0, 2.0]
+    for crash_frac in crash_fracs:
+        for stall_rate in stall_rates:
+            for hedge in ((True,) if crash_frac == stall_rate == 0.0
+                          else (True, False)):
+                plan = FaultPlan.random(
+                    17, NW, horizon, crash_frac=crash_frac,
+                    stall_rate=stall_rate, stall_factor=6.0,
+                    transient_prob=0.05)
+                s, m, w = _serve_point(index, embedder, plan=plan,
+                                       hedge=hedge, n=n)
+                tag = (f"crash{crash_frac:g}_stall{stall_rate:g}"
+                       f"_{'hedge' if hedge else 'nohedge'}")
+                emit(f"faults_{tag}", w["goodput_rps"] * 1e3,
+                     f"goodput_rps={w['goodput_rps']:.2f}"
+                     f"_p95_ms={w['p95_latency_ms']:.1f}"
+                     f"_shed={m.shed}"
+                     f"_deaths={m.worker_deaths}"
+                     f"_redisp={m.redispatches}"
+                     f"_retries={m.retries}"
+                     f"_hwins={m.hedged_wins}"
+                     f"_degraded={m.degraded_completions}")
+    # shard-mode failover point: crashes include shard owners, orphaned
+    # parts fail over to surviving workers (whole-index fallback)
+    plan = FaultPlan.random(23, NW, horizon, crash_frac=0.25,
+                            stall_rate=0.5, stall_factor=6.0,
+                            transient_prob=0.05)
+    s, m, w = _serve_point(index, embedder, plan=plan, hedge=True, n=n,
+                           sharding=True)
+    emit("faults_sharded_crash0.25", w["goodput_rps"] * 1e3,
+         f"goodput_rps={w['goodput_rps']:.2f}"
+         f"_p95_ms={w['p95_latency_ms']:.1f}"
+         f"_deaths={m.worker_deaths}"
+         f"_failovers={m.failovers}"
+         f"_degraded={m.degraded_completions}")
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="",
+                    help="write the emitted rows as a JSON record")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=args.quick)
+    if args.json:
+        from benchmarks import common
+
+        with open(args.json, "w") as f:
+            json.dump({"rows": common.RESULTS}, f, indent=1)
+        print(f"# wrote {args.json} ({len(common.RESULTS)} rows)",
+              file=sys.stderr)

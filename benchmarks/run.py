@@ -24,6 +24,7 @@ MODULES = [
     ("multiworker", "benchmarks.bench_multiworker"),  # retrieval-pool scaling
     ("serving", "benchmarks.bench_serving"),          # streaming goodput sweep
     ("sharded_serving", "benchmarks.bench_sharded_serving"),  # shard-mode scatter-gather
+    ("faults", "benchmarks.bench_faults"),            # goodput under injected faults
     ("plan", "benchmarks.bench_plan"),                # SoA sub-stage executor
     ("crossreq", "benchmarks.bench_crossreq"),        # cross-request layer
     ("speculation", "benchmarks.bench_speculation"),  # Fig. 17

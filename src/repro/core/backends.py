@@ -43,6 +43,7 @@ class SimBackend:
         # fault injection
         straggler_prob: float = 0.0,
         straggler_factor: float = 4.0,
+        fault_plan=None,  # serving.faults.FaultPlan: seeded chaos script
         seed: int = 0,
     ):
         self.index = index
@@ -57,6 +58,7 @@ class SimBackend:
         self.device_launch_us = device_launch_us
         self.straggler_prob = straggler_prob
         self.straggler_factor = straggler_factor
+        self.fault_plan = fault_plan
         self.seed = seed
         self._rng = np.random.default_rng(seed)
         self._sizes = index.cluster_sizes()
@@ -221,6 +223,17 @@ class SimBackend:
             return dur * self.straggler_factor
         return dur
 
+    def fault_latency(self, dur: float, worker_id: int = -1,
+                      now_us: float = 0.0) -> float:
+        """FaultPlan timing hook: inflate a job's service time by the stall
+        window active on its worker at dispatch time.  Applied *after*
+        straggler mitigation — injected stalls are what the scheduler's
+        timeout/hedging layer must cover, so the straggler cap must not
+        silently absorb them.  Identity without a plan."""
+        if self.fault_plan is None:
+            return dur
+        return dur * self.fault_plan.stall_factor(worker_id, now_us)
+
     def worker_report(self) -> dict:
         """Per-retrieval-worker *modeled charge* (us) accumulated by
         search_charged, before straggler injection/mitigation and including
@@ -254,6 +267,7 @@ class RealBackend:
         # default so resident clusters are discounted comparably.
         self.fused_saved_us = 0.0
         self.device_speedup = 8.0
+        self.fault_plan = None  # chaos scripts target the simulated clock
         self._lexical = None
 
     def query_embedding(self, req, round_idx: int) -> np.ndarray:
@@ -322,6 +336,12 @@ class RealBackend:
 
     def maybe_straggle(self, dur: float, worker_id: int = -1) -> float:
         return dur
+
+    def fault_latency(self, dur: float, worker_id: int = -1,
+                      now_us: float = 0.0) -> float:
+        if self.fault_plan is None:
+            return dur
+        return dur * self.fault_plan.stall_factor(worker_id, now_us)
 
     def worker_report(self) -> dict:
         return dict(sorted(self.worker_busy_us.items()))

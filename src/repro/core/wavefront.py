@@ -42,6 +42,7 @@ from repro.retrieval.plan import (
     make_gather_plan,
 )
 from repro.serving import dispatch as dispatch_mod
+from repro.serving import lifecycle as lifecycle_mod
 
 SPEC_RET_K = 20  # top-k width of speculative LocalCache warmups (paper k')
 
@@ -99,6 +100,29 @@ class SchedulerConfig:
     # not a sum).
     index_sharding: bool = False
     shard_merge_us: float = 40.0
+    # --- fault tolerance (serving/lifecycle.py + serving/faults.py): the
+    # worker registry is always built (drain/rebind are operational APIs);
+    # the *recovery* layer — per-job deadlines, retry/backoff of transiently
+    # failed units, hedged duplicates for SUSPECT stragglers, shard failover
+    # and degraded completion — activates when fault_tolerance is on or the
+    # backend carries a FaultPlan.  With neither, the serving path is
+    # bit-identical to the fault-unaware loop.  suspect/dead thresholds are
+    # heartbeat-gap cutoffs on the virtual clock; timeout_factor scales the
+    # cost-model charge into a per-job deadline; retry_budget bounds
+    # re-dispatches per (request, node) before the unit completes degraded;
+    # retry_backoff_us doubles per attempt; hedge_suspect duplicates
+    # in-flight work of SUSPECT workers (first result wins);
+    # failover_whole_index lets orphaned shard parts run on any serving
+    # worker when no replica covers them (off: such parts degrade).
+    fault_tolerance: bool = False
+    heartbeat_interval_us: float = 50_000.0
+    suspect_after_us: float = 150_000.0
+    dead_after_us: float = 400_000.0
+    timeout_factor: float = 4.0
+    retry_budget: int = 3
+    retry_backoff_us: float = 20_000.0
+    hedge_suspect: bool = True
+    failover_whole_index: bool = True
 
     @classmethod
     def preset(cls, mode: str, **kw) -> "SchedulerConfig":
@@ -162,6 +186,18 @@ class Metrics:
     # generic registry host stages (rerank / rewrite / compress / ...)
     stage_tasks: int = 0  # dispatched stage work batches / variant scans
     lexical_fusions: int = 0  # hybrid dense+lexical RRF folds applied
+    # fault-tolerance counters (all zero with no faults and knobs off)
+    worker_suspects: int = 0  # HEALTHY -> SUSPECT transitions
+    worker_deaths: int = 0  # transitions into DEAD
+    task_timeouts: int = 0  # jobs past their cost-model deadline
+    redispatches: int = 0  # units lost on a dead worker, re-dispatched
+    retries: int = 0  # transiently failed units re-dispatched
+    transient_failures: int = 0  # injected transient unit failures observed
+    hedged_dispatches: int = 0  # units duplicated onto idle workers
+    hedged_wins: int = 0  # units completed by the hedge copy first
+    failovers: int = 0  # shard parts routed off their dead/drained owner
+    degraded_drops: int = 0  # units dropped after budget/coverage exhaustion
+    degraded_completions: int = 0  # requests finished with partial results
 
     @property
     def ret_busy_us(self) -> float:
@@ -281,6 +317,17 @@ class Metrics:
             "shard_merges": self.shard_merges,
             "stage_tasks": self.stage_tasks,
             "lexical_fusions": self.lexical_fusions,
+            "worker_suspects": self.worker_suspects,
+            "worker_deaths": self.worker_deaths,
+            "task_timeouts": self.task_timeouts,
+            "redispatches": self.redispatches,
+            "retries": self.retries,
+            "transient_failures": self.transient_failures,
+            "hedged_dispatches": self.hedged_dispatches,
+            "hedged_wins": self.hedged_wins,
+            "failovers": self.failovers,
+            "degraded_drops": self.degraded_drops,
+            "degraded_completions": self.degraded_completions,
             # hybrid-engine counters, surfaced so benches/--json records see
             # them without reaching into the backend
             "cache_hit_rate": float(self.cache_stats.get("hit_rate", 0.0)),
@@ -310,6 +357,30 @@ class _ShardGather:
     plan: object  # replay RetrievalPlan (one group)
     board: BatchTopK  # (n_clusters, plan.k) partial item rows
     remaining: int  # parts still in flight
+
+
+@dataclasses.dataclass
+class _FaultState:
+    """Recovery-layer bookkeeping, built only when fault tolerance is active
+    (``SchedulerConfig.fault_tolerance`` or a backend ``FaultPlan``).
+
+    Every dispatched *unit* of retrieval-side work (sub-stage plan group,
+    shard scatter part, registry stage plan group, host StageTask) gets a
+    token; ``units[token]`` tracks how many in-flight copies exist (1, or 2
+    while a hedge twin runs) and whether one already resolved — the
+    first-result-wins dedup that makes hedging and late fenced results safe
+    to apply exactly once."""
+
+    plan: object = None  # serving.faults.FaultPlan (may be None)
+    dispatch_seq: int = 0  # monotone counter feeding transient-fault draws
+    next_token: int = 0
+    units: dict = dataclasses.field(default_factory=dict)
+    # (request_id, node_id) -> transient-retry attempts consumed
+    attempts: dict = dataclasses.field(default_factory=dict)
+    # request_id -> earliest virtual instant a retried unit may re-dispatch
+    not_before: dict = dataclasses.field(default_factory=dict)
+    # shard scatter parts lost on a dead worker: [(gather, positions), ...]
+    orphan_parts: list = dataclasses.field(default_factory=list)
 
 
 class WavefrontScheduler:
@@ -363,6 +434,19 @@ class WavefrontScheduler:
             tracker=self.crossreq.tracker if self.crossreq else None,
             replica_map=self.crossreq.replicas if self.crossreq else None,
             shard_map=self.shard_map)
+        # worker lifecycle registry: always built (drain/rebind are
+        # operational APIs); with no fault plan and no drain calls every
+        # worker stays HEALTHY and the loop is unchanged.  The *recovery*
+        # machinery (_FaultState) activates only on an explicit knob or plan.
+        self.lifecycle = lifecycle_mod.WorkerRegistry(
+            self.num_ret_workers,
+            heartbeat_interval_us=config.heartbeat_interval_us,
+            suspect_after_us=config.suspect_after_us,
+            dead_after_us=config.dead_after_us)
+        fault_plan = getattr(backend, "fault_plan", None)
+        self.ft: Optional[_FaultState] = None
+        if config.fault_tolerance or fault_plan is not None:
+            self.ft = _FaultState(plan=fault_plan)
         self.metrics = Metrics()
         self.metrics.ret_busy_per_worker = [0.0] * self.num_ret_workers
         # arrival queue: heap keyed (arrival_us, request_id) — O(log n)
@@ -380,12 +464,15 @@ class WavefrontScheduler:
         if config.max_pending > 0 or config.admission_control:
             self.admission = dispatch_mod.AdmissionController(
                 config, self.budget, self.backend.cluster_cost_model,
-                self._cluster_sizes, shard_map=self.shard_map)
+                self._cluster_sizes, shard_map=self.shard_map,
+                lifecycle=self.lifecycle)
         self._ret_fifo: list[RequestContext] = []  # coarse-mode stage queue
         self._spec_ret_round: dict[int, int] = {}  # req -> last spec-ret round
         # request_id -> (query_vec, cluster queue) precomputed in one batched
         # probe_order call for all arrivals admitted in the same cycle
         self._probe_hints: dict[int, tuple] = {}
+        # consecutive no-event cycles: trips the stranded-work degrade net
+        self._idle_cycles = 0
 
     # ------------------------------------------------------------------ API
     @property
@@ -413,6 +500,29 @@ class WavefrontScheduler:
         heapq.heappush(self._pending,
                        (float(req.arrival_us), req.request_id, req))
         return True
+
+    # ------------------------------------------------- worker pool lifecycle
+    def register_worker(self) -> int:
+        """Add a fresh retrieval worker to the pool mid-run.  The new worker
+        starts HEALTHY and owns no shard — in shard mode it serves stage
+        work, replica scans and whole-index failover until a resharding
+        assigns it clusters."""
+        wid = self.lifecycle.register(self.now)
+        self.num_ret_workers += 1
+        self.cfg.num_ret_workers = self.num_ret_workers
+        self._ret_jobs.append(None)
+        self.metrics.ret_busy_per_worker.append(0.0)
+        self.dispatcher.add_worker()
+        return wid
+
+    def drain_worker(self, wid: int) -> bool:
+        """Operator-initiated leave: the worker finishes its in-flight job
+        and takes no new work until ``rebind_worker``."""
+        return self.lifecycle.drain(int(wid), self.now)
+
+    def rebind_worker(self, wid: int) -> bool:
+        """Return a drained worker to the pool (JOINING -> HEALTHY)."""
+        return self.lifecycle.rebind(int(wid), self.now)
 
     # -------------------------------------------------------------- helpers
     def _enter_stage(self, req: RequestContext, now: float) -> None:
@@ -568,6 +678,8 @@ class WavefrontScheduler:
             self.metrics.slo_violations += 1
         self.metrics.finish_log.append((now, lat, under_slo))
         self.metrics.finished += 1
+        if req.state.get("_degraded"):
+            self.metrics.degraded_completions += 1
         self.active.remove(req)
         self.done.append(req)
         self.dag.gc()
@@ -600,11 +712,19 @@ class WavefrontScheduler:
     def _slack_order(self, reqs, now: float) -> list:
         """Wavefront order: tightest SLO slack admitted to assembly first.
         In shard mode remaining-time estimates use the scatter-gather
-        service model (max over shards + merge term)."""
+        service model (max over shards + merge term).  With workers dead or
+        draining, per-request estimates inflate by the static/effective pool
+        ratio so slack ordering sees the shrunken pool."""
+        scale = 1.0
+        if not self.lifecycle.all_healthy():
+            eff = self.lifecycle.effective_pool_size()
+            if 0 < eff < self.num_ret_workers:
+                scale = self.num_ret_workers / eff
         return dispatch_mod.order_by_slack(
             reqs, now, self.budget, self.backend.cluster_cost_model,
             self._cluster_sizes, self.cfg.slo_us, self.shard_map,
-            self.cfg.shard_merge_us if self.shard_map is not None else 0.0)
+            self.cfg.shard_merge_us if self.shard_map is not None else 0.0,
+            pool_scale=scale)
 
     def _assemble_gen(self, now: float):
         """Continuous-batching generation sub-stage across requests."""
@@ -639,7 +759,7 @@ class WavefrontScheduler:
         return self._assemble_ret_coarse(now, idle)
 
     def _finalize_ret_job(self, now: float, wid: int, plan,
-                          tasks=()) -> dict:
+                          tasks=(), hedge_tokens=None) -> dict:
         charge = 0.0
         results_fn = None
         if plan is not None:
@@ -651,10 +771,20 @@ class WavefrontScheduler:
             charge += c
             task_runs.append((t, fn))
         dur = self._mitigate_straggler(charge, expected=charge, worker_id=wid)
+        if self.ft is not None and self.ft.plan is not None:
+            # injected stall windows inflate service time *after* straggler
+            # mitigation — they are exactly what the timeout/hedging layer
+            # must cover, so the cap must not silently absorb them
+            dur = self.backend.fault_latency(dur, worker_id=wid, now_us=now)
         self.dispatcher.note_busy(wid, dur)
         self.metrics.substages_ret += 1
-        return {"plan": plan, "results_fn": results_fn, "tasks": task_runs,
-                "end": now + dur, "dur": dur, "worker": wid}
+        job = {"plan": plan, "results_fn": results_fn, "tasks": task_runs,
+               "end": now + dur, "dur": dur, "worker": wid}
+        if self.ft is not None:
+            job["deadline"] = (now + charge * self.cfg.timeout_factor
+                               + self.cfg.sched_overhead_us)
+            self._ft_register_job(job, wid, hedge_tokens)
+        return job
 
     def _add_ret_group(self, builder: PlanBuilder, r: RequestContext,
                        clusters, sn) -> None:
@@ -685,7 +815,7 @@ class WavefrontScheduler:
 
     # ------------------------------------------------ shard scatter-gather
     def _scatter_ret(self, builders: dict, cycle_load: dict,
-                     r: RequestContext, idle: list[int], cm,
+                     r: RequestContext, idle: list[int], cm, now: float,
                      *, whole_stage: bool) -> None:
         """Shard-mode dispatch of one request's next retrieval sub-stage:
         take the Eq.(1) budget prefix of the (reordered) cluster queue (the
@@ -694,7 +824,12 @@ class WavefrontScheduler:
         workers' slabs, to the least-loaded replica holder.  Parts whose
         eligible workers are all busy stay queued (order preserved) for a
         later cycle; the dispatched parts form one ``_ShardGather`` whose
-        completion performs the whole-index k-way merge."""
+        completion performs the whole-index k-way merge.
+
+        When the pool is impaired, parts whose owner is DEAD or DRAINING
+        fail over (replica holder, then whole-index-capable worker); parts
+        nothing can ever cover are dropped and the stage completes degraded
+        rather than hanging."""
         queue = r.ret.cluster_queue
         if not queue:
             return
@@ -706,18 +841,40 @@ class WavefrontScheduler:
         prefix = queue[:n]
         assign = []
         taken = set()
+        dropped = set()
+        impaired = not self.lifecycle.all_healthy()
         for shard, part in self.shard_map.split(prefix):
+            if impaired and not self.lifecycle.owner_serves(shard):
+                wid, can_wait = self._pick_failover_worker(part, idle,
+                                                           cycle_load)
+                if wid is not None:
+                    assign.append((shard, wid, part))
+                    taken.add(shard)
+                    self.metrics.failovers += 1
+                elif not can_wait:
+                    dropped.add(shard)
+                continue
             wid = self.dispatcher.pick_shard_worker(part, shard, idle,
                                                     extra_load=cycle_load)
             if wid is not None:
                 assign.append((shard, wid, part))
                 taken.add(shard)
-        if not assign:
+        if not assign and not dropped:
             return
         own = self.shard_map.owner
         dispatched = [c for c in prefix if int(own[c]) in taken]
         r.ret.cluster_queue = (
-            [c for c in prefix if int(own[c]) not in taken] + queue[n:])
+            [c for c in prefix
+             if int(own[c]) not in taken and int(own[c]) not in dropped]
+            + queue[n:])
+        if dropped:
+            self.metrics.degraded_drops += len(dropped)
+            self._flag_degraded(r, now)
+        if not assign:
+            # every placeable part degraded away; the stage may now be done
+            if r.ret.done:
+                self._finish_ret_stage(r, now)
+            return
         gather = self._new_gather(r, dispatched, len(assign))
         owners = self.shard_map.owner_of(dispatched)
         fanout = 1
@@ -815,11 +972,16 @@ class WavefrontScheduler:
         cycle_load: dict[int, float] = {w: 0.0 for w in idle}
         tasks: dict[int, list] = {w: [] for w in idle}
         cm = self.backend.cluster_cost_model
+        if (self.ft is not None and self.ft.orphan_parts
+                and self.shard_map is not None):
+            self._place_orphans(builders, cycle_load, idle, now)
+        nb = self.ft.not_before if self.ft is not None else None
         ready = [r for r in self.active
-                 if (r.ret is not None and not r.ret.done
-                     and not getattr(r.ret, "_inflight", False))
-                 or (r.stage is not None and not r.stage.done
-                     and not r.stage.parked and r.stage.work_queue)]
+                 if (nb is None or nb.get(r.request_id, 0.0) <= now)
+                 and ((r.ret is not None and not r.ret.done
+                       and not getattr(r.ret, "_inflight", False))
+                      or (r.stage is not None and not r.stage.done
+                          and not r.stage.parked and r.stage.work_queue))]
         ordered = self._slack_order(ready, now)
         if self.crossreq is not None and self.crossreq.fusion is not None:
             ordered = self._fuse_wavefront(ordered)
@@ -834,7 +996,7 @@ class WavefrontScheduler:
                     whole_stage=False)
                 continue
             if self.shard_map is not None:
-                self._scatter_ret(builders, cycle_load, r, idle, cm,
+                self._scatter_ret(builders, cycle_load, r, idle, cm, now,
                                   whole_stage=False)
                 continue
             sn = transforms.split_retrieval_next(
@@ -931,8 +1093,14 @@ class WavefrontScheduler:
             cycle_load: dict[int, float] = {w: 0.0 for w in idle}
             tasks: dict[int, list] = {w: [] for w in idle}
             cm = self.backend.cluster_cost_model
+            if self.ft is not None and self.ft.orphan_parts:
+                self._place_orphans(builders, cycle_load, idle, now)
+            nb = self.ft.not_before if self.ft is not None else None
             keep = []
             for r in self._ret_fifo:
+                if nb is not None and nb.get(r.request_id, 0.0) > now:
+                    keep.append(r)  # retry backoff still running
+                    continue
                 if r.stage is not None:
                     # registry stages are placement-free (host arrays hold
                     # the whole index): dispatch the whole unit queue
@@ -944,9 +1112,9 @@ class WavefrontScheduler:
                 if getattr(r.ret, "_inflight", False):
                     keep.append(r)
                     continue
-                self._scatter_ret(builders, cycle_load, r, idle, cm,
+                self._scatter_ret(builders, cycle_load, r, idle, cm, now,
                                   whole_stage=True)
-                if r.ret.cluster_queue:
+                if r.ret is not None and r.ret.cluster_queue:
                     keep.append(r)
             self._ret_fifo = keep
             jobs = {}
@@ -960,6 +1128,11 @@ class WavefrontScheduler:
         # everything queued; 'sequential' additionally holds the global lock
         take = list(self._ret_fifo)
         self._ret_fifo = []
+        if self.ft is not None and self.ft.not_before:
+            nb = self.ft.not_before
+            self._ret_fifo = [r for r in take
+                              if nb.get(r.request_id, 0.0) > now]
+            take = [r for r in take if nb.get(r.request_id, 0.0) <= now]
         builder = PlanBuilder()
         wid = self.dispatcher.least_loaded(idle)
         task_list: list = []
@@ -1053,6 +1226,477 @@ class WavefrontScheduler:
             return self.cfg.straggler_cap * expected + self.cfg.sched_overhead_us
         return raw
 
+    # ------------------------------------------------------- fault recovery
+    def _ft_register_job(self, job, wid: int, hedge_tokens=None) -> None:
+        """Token-register every recoverable unit of a freshly dispatched job
+        and draw each dispatch's transient-failure fate from the seeded
+        stream.  Tokens give hedged twins and fenced late results
+        exactly-once application; speculative warmups are best-effort and
+        carry no token."""
+        ft = self.ft
+        tokens: dict = {}
+        failed: set = set()
+        plan = job["plan"]
+        if plan is not None:
+            for g, meta in enumerate(plan.group_meta):
+                if meta[0] not in ("ret", "shard", "stage"):
+                    continue
+                if hedge_tokens is not None and g in hedge_tokens:
+                    tok = hedge_tokens[g]
+                    unit = ft.units.get(tok)
+                    if unit is None:
+                        # twin settled between selection and dispatch: keep
+                        # a resolved token so this copy's result is fenced
+                        ft.units[tok] = {"meta": meta, "inflight": 1,
+                                         "resolved": True}
+                    else:
+                        unit["inflight"] += 1
+                else:
+                    tok = ft.next_token
+                    ft.next_token += 1
+                    ft.units[tok] = {"meta": meta, "inflight": 1,
+                                     "resolved": False}
+                tokens[g] = tok
+                seq = ft.dispatch_seq
+                ft.dispatch_seq += 1
+                if ft.plan is not None and ft.plan.transient_fault(wid, seq):
+                    failed.add(("g", g))
+        task_tokens: dict = {}
+        for i, (task, _fn) in enumerate(job["tasks"]):
+            tok = ft.next_token
+            ft.next_token += 1
+            ft.units[tok] = {"task": task, "inflight": 1, "resolved": False}
+            task_tokens[i] = tok
+            seq = ft.dispatch_seq
+            ft.dispatch_seq += 1
+            if ft.plan is not None and ft.plan.transient_fault(wid, seq):
+                failed.add(("t", i))
+        job["tokens"] = tokens
+        job["task_tokens"] = task_tokens
+        job["failed"] = failed
+
+    def _ft_tick(self, now: float) -> None:
+        """Per-cycle fault housekeeping: fold heartbeat state into lifecycle
+        transitions (recovering a dead worker's lost units), expire retry
+        backoffs, mark jobs past their cost-model deadline, and hedge
+        in-flight work of timed-out or SUSPECT workers."""
+        ft = self.ft
+        for wid, _old, new in self.lifecycle.tick(now, ft.plan):
+            if new == lifecycle_mod.SUSPECT:
+                self.metrics.worker_suspects += 1
+            elif new == lifecycle_mod.DEAD:
+                self.metrics.worker_deaths += 1
+                self._on_worker_dead(wid, now)
+        if ft.not_before:
+            for rid in [r for r, t in ft.not_before.items() if t <= now]:
+                del ft.not_before[rid]
+        for wid, job in enumerate(self._ret_jobs):
+            if job is None or job.get("lost"):
+                continue
+            if (not job.get("timed_out")
+                    and job.get("deadline") is not None
+                    and job["deadline"] <= now < job["end"]):
+                job["timed_out"] = True
+                self.metrics.task_timeouts += 1
+            if (self.cfg.hedge_suspect and not job.get("hedge")
+                    and not job.get("hedged")
+                    and (job.get("timed_out")
+                         or self.lifecycle.state_of(wid)
+                         == lifecycle_mod.SUSPECT)):
+                hedged_units = self._hedge_job(wid, job, now)
+                if hedged_units:
+                    job["hedged"] = True
+                    self.metrics.hedged_dispatches += hedged_units
+
+    def _job_crashed(self, wid: int, job) -> bool:
+        """True when the fault plan kills the worker before this job's
+        completion instant — its results are lost and must be fenced."""
+        plan = self.ft.plan
+        if plan is None:
+            return False
+        c = plan.crash_at(wid)
+        return c is not None and c < job["end"]
+
+    def _on_worker_dead(self, wid: int, now: float) -> None:
+        """Recover everything in flight on a worker just declared DEAD: the
+        job's results are fenced and every lost unit re-dispatched (the
+        sub-stage is the re-dispatch quantum).  Crash recovery does not
+        consume the transient retry budget — a worker dies at most once."""
+        ft = self.ft
+        job = self._ret_jobs[wid]
+        if job is None:
+            return
+        self._ret_jobs[wid] = None
+        toks = list(job.get("tokens", {}).values())
+        toks += list(job.get("task_tokens", {}).values())
+        for tok in toks:
+            unit = ft.units.get(tok)
+            if unit is None:
+                continue
+            unit["inflight"] -= 1
+            if unit["resolved"]:
+                if unit["inflight"] <= 0:
+                    del ft.units[tok]
+                continue
+            if unit["inflight"] > 0:
+                continue  # a hedge twin still runs this unit
+            del ft.units[tok]
+            self.metrics.redispatches += 1
+            self._ft_requeue_unit(unit, now)
+
+    def _ft_settle_group(self, job, g: int, now: float) -> bool:
+        """First-result-wins settlement of one completed plan group.
+        Returns True when the result should be applied (this copy won and
+        did not fail transiently)."""
+        ft = self.ft
+        tok = job["tokens"].get(g)
+        if tok is None:
+            return True  # spec warmup: no recovery semantics
+        unit = ft.units.get(tok)
+        if unit is None:
+            return False  # fully settled already: fence the late copy
+        unit["inflight"] -= 1
+        if unit["resolved"]:
+            if unit["inflight"] <= 0:
+                del ft.units[tok]
+            return False
+        if ("g", g) in job["failed"]:
+            self.metrics.transient_failures += 1
+            if unit["inflight"] <= 0:
+                del ft.units[tok]
+                self._ft_retry_or_degrade(unit, now)
+            return False
+        unit["resolved"] = True
+        if unit["inflight"] <= 0:
+            del ft.units[tok]
+        if job.get("hedge"):
+            self.metrics.hedged_wins += 1
+        return True
+
+    def _ft_settle_task(self, job, i: int, now: float) -> bool:
+        """Task-batch analogue of ``_ft_settle_group``."""
+        ft = self.ft
+        tok = job["task_tokens"].get(i)
+        if tok is None:
+            return True
+        unit = ft.units.get(tok)
+        if unit is None:
+            return False
+        unit["inflight"] -= 1
+        if unit["resolved"]:
+            if unit["inflight"] <= 0:
+                del ft.units[tok]
+            return False
+        if ("t", i) in job["failed"]:
+            self.metrics.transient_failures += 1
+            if unit["inflight"] <= 0:
+                del ft.units[tok]
+                self._ft_retry_or_degrade(unit, now)
+            return False
+        unit["resolved"] = True
+        if unit["inflight"] <= 0:
+            del ft.units[tok]
+        return True
+
+    @staticmethod
+    def _unit_req(unit):
+        meta = unit.get("meta")
+        if meta is not None:
+            return meta[1].req if meta[0] == "shard" else meta[1]
+        return unit["task"].req
+
+    def _ft_retry_or_degrade(self, unit, now: float) -> None:
+        """A unit failed transiently: re-dispatch with exponential backoff
+        while the per-(request, node) budget lasts, then complete the stage
+        degraded."""
+        ft = self.ft
+        r = self._unit_req(unit)
+        if r is None or r.finished:
+            return
+        key = (r.request_id, r.current)
+        att = ft.attempts.get(key, 0) + 1
+        ft.attempts[key] = att
+        if att > self.cfg.retry_budget:
+            self.metrics.degraded_drops += 1
+            self._ft_degrade_unit(unit, now)
+            return
+        self.metrics.retries += 1
+        back = self.cfg.retry_backoff_us * (2.0 ** (att - 1))
+        ft.not_before[r.request_id] = max(
+            ft.not_before.get(r.request_id, 0.0), now + back)
+        self._ft_requeue_unit(unit, now)
+
+    def _ft_requeue_unit(self, unit, now: float) -> None:
+        """Put a lost/failed unit back at the head of its owner's queue; the
+        next assembly cycle re-dispatches it, possibly on another worker."""
+        meta = unit.get("meta")
+        if meta is None:
+            task = unit["task"]
+            r = task.req
+            if task.sn is not None:
+                self.dag.complete(task.sn)
+            prog = r.stage
+            if r.finished or prog is None or prog.kind != task.kind:
+                return
+            prog.work_queue[0:0] = list(task.units)
+            prog.inflight_units -= len(task.units)
+            self._requeue_coarse(r)
+            return
+        kind = meta[0]
+        if kind == "ret":
+            _, r, sn, clusters = meta
+            if sn is not None:
+                self.dag.complete(sn)
+            if r.finished or r.ret is None:
+                return
+            r.ret.cluster_queue = list(clusters) + r.ret.cluster_queue
+            r.ret._inflight = False  # type: ignore[attr-defined]
+            self._requeue_coarse(r)
+        elif kind == "shard":
+            _, gather, positions = meta
+            self.ft.orphan_parts.append((gather, positions))
+        else:  # "stage": one registry plan group (e.g. a rewrite variant)
+            _, r, sp, ref = meta
+            vi, sid = ref
+            prog = r.stage
+            if r.finished or prog is None or prog.kind != sp.kind:
+                return
+            pl = prog.payload
+            pending = pl["sn_pending"].get(sid)
+            if pending is not None:
+                pending[1] -= 1
+                if pending[1] <= 0:
+                    self.dag.complete(pending[0])
+                    del pl["sn_pending"][sid]
+            prog.work_queue.insert(0, vi)
+            prog.inflight_units -= 1
+            self._requeue_coarse(r)
+
+    def _ft_degrade_unit(self, unit, now: float) -> None:
+        """Retry budget exhausted (or nothing can ever run the unit): drop
+        the work and complete the stage with whatever partial results exist,
+        flagged degraded — the contract is partial top-k, never a hang."""
+        meta = unit.get("meta")
+        if meta is None:
+            task = unit["task"]
+            r = task.req
+            if task.sn is not None:
+                self.dag.complete(task.sn)
+            prog = r.stage
+            if r.finished or prog is None or prog.kind != task.kind:
+                return
+            prog.inflight_units -= len(task.units)
+            self._flag_degraded(r, now)
+            if prog.done:
+                self._finish_stage(r, now)
+            else:
+                self._requeue_coarse(r)
+            return
+        kind = meta[0]
+        if kind == "ret":
+            _, r, sn, clusters = meta
+            if sn is not None:
+                self.dag.complete(sn)
+            if r.finished or r.ret is None:
+                return
+            r.ret._inflight = False  # type: ignore[attr-defined]
+            self._flag_degraded(r, now)
+            if r.ret.done:
+                self._finish_ret_stage(r, now)
+            else:
+                self._requeue_coarse(r)
+        elif kind == "shard":
+            _, gather, positions = meta
+            gather.remaining -= 1
+            r = gather.req
+            if not r.finished and r.ret is not None:
+                self._flag_degraded(r, now)
+            if gather.remaining <= 0:
+                self._finish_gather(gather, now)
+        else:
+            _, r, sp, ref = meta
+            vi, sid = ref
+            prog = r.stage
+            if r.finished or prog is None or prog.kind != sp.kind:
+                return
+            pl = prog.payload
+            pending = pl["sn_pending"].get(sid)
+            if pending is not None:
+                pending[1] -= 1
+                if pending[1] <= 0:
+                    self.dag.complete(pending[0])
+                    del pl["sn_pending"][sid]
+            prog.inflight_units -= 1
+            self._flag_degraded(r, now)
+            if prog.done:
+                self._finish_stage(r, now)
+            else:
+                self._requeue_coarse(r)
+
+    def _requeue_coarse(self, r: RequestContext) -> None:
+        if (self.cfg.mode != "hedra" and r in self.active
+                and r not in self._ret_fifo):
+            self._ret_fifo.append(r)
+
+    def _flag_degraded(self, r: RequestContext, now: float) -> None:
+        r.state["_degraded"] = True
+        r.log(now, "degraded", r.current)
+
+    def _degrade_stranded(self, now: float) -> None:
+        """No worker can take retrieval-side work (all DEAD or DRAINING, or
+        nothing eligible is ever coming back): complete every queued
+        retrieval/stage unit degraded instead of hanging.  Generation work
+        is unaffected (separate worker)."""
+        if self.ft is not None and self.ft.orphan_parts:
+            parts = self.ft.orphan_parts
+            self.ft.orphan_parts = []
+            for gather, positions in parts:
+                self.metrics.degraded_drops += 1
+                gather.remaining -= 1
+                r = gather.req
+                if r.finished or r.ret is None:
+                    continue
+                self._flag_degraded(r, now)
+                if gather.remaining <= 0:
+                    self._finish_gather(gather, now)
+        for r in list(self.active):
+            if r.finished:
+                continue
+            if (r.ret is not None and not r.ret.done
+                    and not getattr(r.ret, "_inflight", False)):
+                self.metrics.degraded_drops += 1
+                r.ret.cluster_queue = []
+                self._flag_degraded(r, now)
+                self._finish_ret_stage(r, now)
+            elif (r.stage is not None and not r.stage.done
+                  and not r.stage.parked and r.stage.work_queue
+                  and r.stage.inflight_units == 0):
+                self.metrics.degraded_drops += 1
+                r.stage.work_queue = []
+                self._flag_degraded(r, now)
+                self._finish_stage(r, now)
+
+    def _hedge_job(self, wid: int, job, now: float) -> int:
+        """Duplicate a straggling job's unresolved retrieval groups onto an
+        idle HEALTHY worker (first result wins via the unit tokens).  Host
+        StageTasks are not hedged — their work re-dispatches on death.
+        Returns the number of duplicated units (0 = nothing hedged)."""
+        plan = job["plan"]
+        if plan is None or not job.get("tokens"):
+            return 0
+        cand = [w for w in range(self.num_ret_workers)
+                if w != wid and self._ret_jobs[w] is None
+                and self.lifecycle.can_schedule(w)]
+        if not cand:
+            return 0
+        ft = self.ft
+        builder = PlanBuilder()
+        tokens: dict = {}
+        g_new = 0
+        for g, meta in enumerate(plan.group_meta):
+            tok = job["tokens"].get(g)
+            unit = ft.units.get(tok) if tok is not None else None
+            if unit is None or unit["resolved"] or unit["inflight"] != 1:
+                continue
+            if meta[0] == "ret":
+                _, r, sn, clusters = meta
+                if r.finished or r.ret is None:
+                    continue
+                builder.add(r.ret.query_vec, clusters,
+                            k=int(plan.group_k[g]), meta=meta,
+                            seed=r.ret.topk, last_kth=r.ret.last_kth,
+                            no_improve=r.ret.no_improve)
+            elif meta[0] == "shard":
+                _, gather, positions = meta
+                r = gather.req
+                if r.finished or r.ret is None:
+                    continue
+                part = [gather.clusters[int(i)] for i in positions]
+                builder.add(r.ret.query_vec, part,
+                            k=int(plan.group_k[g]), meta=meta,
+                            out_k=gather.board.k)
+            else:
+                continue  # stage variant scans: recovered on death instead
+            tokens[g_new] = tok
+            g_new += 1
+        if builder.empty:
+            return 0
+        wid2 = self.dispatcher.least_loaded(cand)
+        hjob = self._finalize_ret_job(now, wid2, builder.build(),
+                                      hedge_tokens=tokens)
+        hjob["hedge"] = True
+        self._ret_jobs[wid2] = hjob
+        return g_new
+
+    def _pick_failover_worker(self, part, idle, cycle_load):
+        """Where an orphaned shard part can run now that its owner is DEAD
+        or DRAINING: a crossreq replica holder whose slab covers the whole
+        part, else (failover_whole_index) any serving worker modelling a
+        shared-storage whole-index scan.  Returns ``(wid, can_wait)`` — wid
+        None with can_wait True means eligible workers exist but are busy
+        (keep the part queued); None/False means nothing can ever cover it
+        (complete degraded)."""
+        eligible = set()
+        if self.crossreq is not None and self.crossreq.replicas is not None:
+            for w in self.crossreq.replicas.covering_holders(part):
+                if self.lifecycle.serving(w):
+                    eligible.add(int(w))
+        if self.cfg.failover_whole_index:
+            for w in range(self.num_ret_workers):
+                if self.lifecycle.serving(w):
+                    eligible.add(w)
+        if not eligible:
+            return None, False
+        ready = [w for w in idle if w in eligible]
+        if not ready:
+            return None, True
+        return self.dispatcher.least_loaded(ready, extra_load=cycle_load), True
+
+    def _place_orphans(self, builders, cycle_load, idle, now) -> None:
+        """Re-dispatch shard scatter parts lost on dead workers: the owner
+        first (if it serves again), then replica holders, then whole-index
+        failover; parts nothing covers complete their request degraded."""
+        ft = self.ft
+        cm = self.backend.cluster_cost_model
+        keep = []
+        for gather, positions in ft.orphan_parts:
+            r = gather.req
+            if r.finished or r.ret is None:
+                gather.remaining -= 1
+                continue
+            if ft.not_before.get(r.request_id, 0.0) > now:
+                keep.append((gather, positions))
+                continue
+            part = [gather.clusters[int(i)] for i in positions]
+            shard = int(self.shard_map.owner[part[0]])
+            if self.lifecycle.owner_serves(shard):
+                wid = self.dispatcher.pick_shard_worker(
+                    part, shard, idle, extra_load=cycle_load)
+                can_wait = True
+            else:
+                wid, can_wait = self._pick_failover_worker(part, idle,
+                                                           cycle_load)
+            if wid is None:
+                if can_wait:
+                    keep.append((gather, positions))
+                else:
+                    self.metrics.degraded_drops += 1
+                    self._flag_degraded(r, now)
+                    gather.remaining -= 1
+                    if gather.remaining <= 0:
+                        self._finish_gather(gather, now)
+                continue
+            builders[wid].add(r.ret.query_vec, part, k=r.ret.topk.k,
+                              meta=("shard", gather, positions),
+                              out_k=gather.board.k)
+            self.dispatcher.note_dispatch(wid, part)
+            cycle_load[wid] = cycle_load.get(wid, 0.0) + cm.batch_cost_us(
+                self._cluster_sizes[np.asarray(part, np.int64)])
+            self.metrics.shard_parts += 1
+            if wid != shard:
+                self.metrics.failovers += 1
+        ft.orphan_parts = keep
+
     # ------------------------------------------------------------ main loop
     def _cycle(self, *, horizon: Optional[float] = None,
                hard_cutoff: Optional[float] = None) -> str:
@@ -1074,6 +1718,13 @@ class WavefrontScheduler:
         """
         now = self.now
         nw = self.num_ret_workers
+        if self.ft is not None:
+            self._ft_tick(now)
+        if (not self.lifecycle.all_healthy()
+                and self.lifecycle.alive_for_work() == 0):
+            # nobody left to take retrieval-side work: complete it degraded
+            # instead of hanging (generation has its own worker)
+            self._degrade_stranded(now)
         # admit arrivals (probe orders batched across the whole cycle)
         admitted = []
         while self._pending and self._pending[0][0] <= now:
@@ -1102,7 +1753,11 @@ class WavefrontScheduler:
             self._gen_job = self._assemble_gen(now)
         sequential_lock = (self.cfg.mode == "sequential" and
                            (self._gen_job is not None or ret_inflight))
-        idle = [w for w in range(nw) if self._ret_jobs[w] is None]
+        if self.lifecycle.all_healthy():
+            idle = [w for w in range(nw) if self._ret_jobs[w] is None]
+        else:
+            idle = [w for w in range(nw) if self._ret_jobs[w] is None
+                    and self.lifecycle.can_schedule(w)]
         if idle and not sequential_lock:
             for wid, job in self._assemble_ret(now, idle).items():
                 self._ret_jobs[wid] = job
@@ -1110,20 +1765,42 @@ class WavefrontScheduler:
         events = []
         if self._gen_job:
             events.append(self._gen_job["end"])
-        events.extend(j["end"] for j in self._ret_jobs if j is not None)
+        events.extend(j["end"] for j in self._ret_jobs
+                      if j is not None and not j.get("lost"))
         if self._pending:
             events.append(self._pending[0][0])
+        if self.ft is not None:
+            # fault-driven wakeups: lifecycle state changes (crash/stall
+            # detection instants), per-job deadlines, retry-backoff expiry
+            t = self.lifecycle.next_transition_us(now, self.ft.plan)
+            if t is not None:
+                events.append(t)
+            for j in self._ret_jobs:
+                if j is None or j.get("lost") or j.get("timed_out"):
+                    continue
+                d = j.get("deadline")
+                if d is not None and now < d < j["end"]:
+                    events.append(d)
+            events.extend(t for t in self.ft.not_before.values() if t > now)
         if not events:
             if self.active:
                 # no work assembled but requests active -> enter stages
                 for r in list(self.active):
                     self._enter_stage(r, now)
+                self._idle_cycles += 1
+                if (self._idle_cycles > 2
+                        and (self.ft is not None
+                             or not self.lifecycle.all_healthy())):
+                    # retrieval work exists but nothing can ever schedule
+                    # it (e.g. sole eligible worker gone): degrade it
+                    self._degrade_stranded(now)
                 if not self.active or any(r.gen or r.ret or r.stage
                                           for r in self.active):
                     return "advanced"
                 raise RuntimeError(
                     f"deadlock: {len(self.active)} active requests, no work")
             return "done"
+        self._idle_cycles = 0
         nxt = min(events)
         if horizon is not None and nxt > horizon:
             return "horizon"
@@ -1137,15 +1814,22 @@ class WavefrontScheduler:
             self._gen_job = None
         for wid in range(nw):
             job = self._ret_jobs[wid]
-            if job and job["end"] <= now:
-                # the dispatcher is the single policy-side load source;
-                # Metrics mirrors its completed share instead of
-                # double-booking an accumulator of its own
-                self.dispatcher.note_complete(wid, job["dur"])
-                self.metrics.ret_busy_per_worker[wid] = (
-                    self.dispatcher.workers[wid].completed_us)
-                self._complete_ret(job, now)
-                self._ret_jobs[wid] = None
+            if job is None or job.get("lost") or job["end"] > now:
+                continue
+            if self.ft is not None and self._job_crashed(wid, job):
+                # the worker died mid-job: fence its results; the lost
+                # units are recovered when missed heartbeats declare it
+                # DEAD (lifecycle transition instants are in the events)
+                job["lost"] = True
+                continue
+            # the dispatcher is the single policy-side load source;
+            # Metrics mirrors its completed share instead of
+            # double-booking an accumulator of its own
+            self.dispatcher.note_complete(wid, job["dur"])
+            self.metrics.ret_busy_per_worker[wid] = (
+                self.dispatcher.workers[wid].completed_us)
+            self._complete_ret(job, now)
+            self._ret_jobs[wid] = None
         return "advanced"
 
     def run(self, max_time_us: float = 4e9) -> Metrics:
@@ -1246,6 +1930,9 @@ class WavefrontScheduler:
             for g, meta in enumerate(plan.group_meta):
                 kind = meta[0]
                 kg = int(plan.group_k[g])
+                if (self.ft is not None
+                        and not self._ft_settle_group(job, g, now)):
+                    continue  # fenced duplicate, hedged loser, or retrying
                 if kind == "ret":
                     _, r, sn, clusters = meta
                     self._apply_ret_result(r, res, g, kg, plan.k, clusters,
@@ -1273,5 +1960,8 @@ class WavefrontScheduler:
                     r.sim_cache.update(emb, res.group_topk(g, kg), self.index,
                                        probed)
                     self.spec.stats.attempted_ret += 1
-        for task, fn in job.get("tasks", ()):
+        for i, (task, fn) in enumerate(job.get("tasks", ())):
+            if (self.ft is not None
+                    and not self._ft_settle_task(job, i, now)):
+                continue
             stages.spec(task.kind).complete_task(self, task, fn(), now)

@@ -77,6 +77,20 @@ class ReplicaMap:
                 out.update(o)
         return out
 
+    def covering_holders(self, clusters: Iterable[int]) -> set[int]:
+        """Workers holding a replica of *every* cluster in the part — the
+        failover candidates that can serve an orphaned shard part whole.
+        Empty whenever any cluster is unreplicated (the dead owner was its
+        only copy)."""
+        common: Optional[set[int]] = None
+        for c in clusters:
+            o = self._owners.get(int(c))
+            cover = set(o) if o else set()
+            common = cover if common is None else (common & cover)
+            if not common:
+                return set()
+        return common or set()
+
     # ---------------------------------------------------------------- refresh
     def refresh_from_tracker(self, tracker: PopularityTracker) -> None:
         """Rank-spread assignment: the i-th hottest cluster is owned by

@@ -41,6 +41,13 @@ def main() -> None:
                     help="distributed IVF retrieval: each worker owns a "
                          "contiguous cluster-range shard; sub-stages "
                          "scatter-gather across the pool")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="inject a seeded random FaultPlan (crashes/stalls/"
+                         "transients) and serve through the recovery path")
+    ap.add_argument("--fault-crash-frac", type=float, default=0.25,
+                    help="fraction of the pool crashed by the fault plan")
+    ap.add_argument("--fault-transient-prob", type=float, default=0.05,
+                    help="per-dispatch transient failure probability")
     args = ap.parse_args()
 
     docs, _, topics = make_corpus(CorpusConfig(n_docs=8000, dim=48, n_topics=64))
@@ -65,10 +72,21 @@ def main() -> None:
         return orig(n_prefill_tokens, batch, n_steps)
 
     backend.gen_duration = gen_duration
+    fault_plan = None
+    if args.fault_seed is not None:
+        from repro.serving.faults import FaultPlan
+
+        horizon = args.n_requests * 20_000.0 + 400_000.0
+        fault_plan = FaultPlan.random(
+            args.fault_seed, args.ret_workers, horizon,
+            crash_frac=args.fault_crash_frac,
+            transient_prob=args.fault_transient_prob)
+        print(f"fault plan: {fault_plan.describe()}")
     server = Server(index, embedder, mode="hedra", backend=backend, nprobe=8,
                     num_ret_workers=args.ret_workers,
                     dispatch_policy=args.dispatch,
-                    index_sharding=args.index_sharding)
+                    index_sharding=args.index_sharding,
+                    fault_plan=fault_plan)
     for i in range(args.n_requests):
         server.add_request(f"query {i}", workflows.build(args.workflow),
                            arrival_us=i * 20_000.0)

@@ -179,7 +179,8 @@ def reference_search(q, slab, valid, k):
 
 
 def scatter_gather_search(
-    index, q: np.ndarray, nprobe: int, k: int, shard_map: ShardMap
+    index, q: np.ndarray, nprobe: int, k: int, shard_map: ShardMap,
+    shards=None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Whole-index IVF search through the serving scatter-gather path.
 
@@ -191,6 +192,13 @@ def scatter_gather_search(
     ``plan_search``/``IVFIndex.search`` — the serving-path analogue of
     ``make_sharded_search``'s all-gather + top-k reduction, on the host.
     Returns ``(dists (Q, k), ids (Q, k))``.
+
+    ``shards`` restricts the scan to a subset of surviving shard ids (the
+    degraded-mode oracle after worker crashes): probes owned by missing
+    shards are dropped before planning, so the result is the partial top-k a
+    degraded-complete request observes — and, for the surviving shards, the
+    parity guarantee versus the whole-index fold over that reduced probe
+    list is unchanged.
     """
     from repro.retrieval.plan import (
         BatchTopK, PlanBuilder, gather_scatter_rows, make_gather_plan,
@@ -200,6 +208,10 @@ def scatter_gather_search(
     probes = index.probe_order(q2, nprobe)
     Q = q2.shape[0]
     clusters = [[int(c) for c in probes[r]] for r in range(Q)]
+    if shards is not None:
+        alive = {int(s) for s in shards}
+        clusters = [[c for c in cl if int(shard_map.owner[c]) in alive]
+                    for cl in clusters]
     owners = [shard_map.owner_of(cl) for cl in clusters]
     gathers = [make_gather_plan(q2[r], clusters[r], k=k) for r in range(Q)]
     boards = [BatchTopK.empty(len(clusters[r]), gathers[r].k)

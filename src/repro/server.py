@@ -39,6 +39,7 @@ keyword overrides as every other scheduler knob::
 """
 from __future__ import annotations
 
+import glob
 import json
 import os
 from typing import Iterable, Optional, Union
@@ -71,12 +72,17 @@ class Server:
         config: Optional[SchedulerConfig] = None,
         workload: Optional[WorkloadProfile] = None,
         journal_path: Optional[str] = None,
+        fault_plan=None,
         **cfg_overrides,
     ):
         self.index = index
         self.embedder = embedder
         self.config = config or SchedulerConfig.preset(mode, **cfg_overrides)
         self.backend = backend or SimBackend(index, embedder)
+        if fault_plan is not None:
+            # injected faults ride on the backend's timing hooks; the
+            # scheduler picks the plan up from there and arms recovery
+            self.backend.fault_plan = fault_plan
         self.workload = workload or WorkloadProfile()
         self.sched = WavefrontScheduler(self.backend, index, self.config,
                                         self.workload)
@@ -86,9 +92,11 @@ class Server:
         # rows in an existing journal re-enter the queue with their original
         # request ids and pre-crash event prefixes
         self.recovered_ids: list = []
-        if journal_path and os.path.exists(journal_path):
-            self.recovered_ids = self.readmit(
-                self.replay_unfinished(journal_path))
+        if journal_path:
+            self._sweep_journal_tmp(journal_path)
+            if os.path.exists(journal_path):
+                self.recovered_ids = self.readmit(
+                    self.replay_unfinished(journal_path))
 
     # ------------------------------------------------------------------ API
     def _alloc_id(self) -> int:
@@ -184,6 +192,39 @@ class Server:
             return {}
         return self.sched.crossreq.report()
 
+    # ------------------------------------------------------ worker lifecycle
+    def register_worker(self) -> int:
+        """Grow the pool mid-run: add a retrieval worker, returns its id."""
+        return self.sched.register_worker()
+
+    def drain_worker(self, wid: int) -> bool:
+        """Stop scheduling new work on ``wid``; in-flight work finishes."""
+        return self.sched.drain_worker(wid)
+
+    def rebind_worker(self, wid: int) -> bool:
+        """Bring a drained/dead worker back into the schedulable pool."""
+        return self.sched.rebind_worker(wid)
+
+    def lifecycle_report(self) -> dict:
+        """Per-worker health states, heartbeats, and state-change timelines
+        plus the pool-level recovery counters."""
+        rep = self.sched.lifecycle.report()
+        m = self.sched.metrics
+        rep["counters"] = {
+            "worker_suspects": m.worker_suspects,
+            "worker_deaths": m.worker_deaths,
+            "task_timeouts": m.task_timeouts,
+            "redispatches": m.redispatches,
+            "retries": m.retries,
+            "transient_failures": m.transient_failures,
+            "hedged_dispatches": m.hedged_dispatches,
+            "hedged_wins": m.hedged_wins,
+            "failovers": m.failovers,
+            "degraded_drops": m.degraded_drops,
+            "degraded_completions": m.degraded_completions,
+        }
+        return rep
+
     def shard_report(self) -> dict:
         """Shard-mode serving state (empty when ``index_sharding`` is off):
         the cluster-range ownership table, scatter/merge counters, and —
@@ -200,6 +241,8 @@ class Server:
             "shard_scatters": self.sched.metrics.shard_scatters,
             "shard_parts": self.sched.metrics.shard_parts,
             "shard_merges": self.sched.metrics.shard_merges,
+            "failovers": self.sched.metrics.failovers,
+            "degraded_completions": self.sched.metrics.degraded_completions,
         }
         hyb = getattr(self.backend, "hybrid", None)
         if hyb is not None:
@@ -232,6 +275,23 @@ class Server:
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)
+        self._sweep_journal_tmp(path)
+
+    @staticmethod
+    def _sweep_journal_tmp(path: str) -> None:
+        """Remove orphaned ``<journal>.tmp.<pid>`` siblings.
+
+        A crash between temp-file write and ``os.replace`` strands the temp
+        file; since the pid suffix changes across restarts, those orphans
+        would otherwise accumulate forever.  Swept on journal-backed server
+        start and after each successful replace — at both points every
+        surviving ``.tmp.*`` is known stale (this process's own temp file is
+        already renamed away or not yet created)."""
+        for stale in glob.glob(glob.escape(path) + ".tmp.*"):
+            try:
+                os.remove(stale)
+            except OSError:
+                pass  # concurrent sweep or permissions: leave it
 
     @staticmethod
     def read_journal(path: str) -> list[dict]:

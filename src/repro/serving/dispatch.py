@@ -80,11 +80,20 @@ class RetrievalDispatcher:
         # becomes ownership-constrained (pick_shard_worker) instead of
         # policy-driven
         self.shard_map = shard_map
+        self.n_clusters = int(n_clusters)
         self.workers = [
             WorkerState(w, np.zeros(n_clusters, np.float64))
             for w in range(self.num_workers)
         ]
         self._rr = 0
+
+    def add_worker(self) -> int:
+        """Grow the pool by one worker (mid-run registration)."""
+        wid = self.num_workers
+        self.workers.append(
+            WorkerState(wid, np.zeros(self.n_clusters, np.float64)))
+        self.num_workers += 1
+        return wid
 
     # ---------------------------------------------------------------- choice
     def least_loaded(self, candidates: Sequence[int],
@@ -173,9 +182,12 @@ class RetrievalDispatcher:
         extra = extra_load or {}
         cl = np.asarray(list(clusters), np.int64)
         scores = {w: float(self.workers[w].freq[cl].sum()) for w in candidates}
+        # explicit -w tie-break: equal (coverage, load) must resolve to the
+        # lowest worker id on every run, whatever order candidates arrive in
         best = max(candidates,
                    key=lambda w: (scores[w],
-                                  -(self.workers[w].busy_us + extra.get(w, 0.0))))
+                                  -(self.workers[w].busy_us + extra.get(w, 0.0)),
+                                  -w))
         if scores[best] <= 0.0:
             return self.least_loaded(candidates, extra_load)
         return best
@@ -236,14 +248,16 @@ def sharded_scan_cost_us(clusters: np.ndarray, cost_model, sizes,
 
 
 def estimate_remaining_us(req, budget, cost_model, sizes,
-                          shard_map=None, merge_us: float = 0.0) -> float:
+                          shard_map=None, merge_us: float = 0.0,
+                          pool_scale: float = 1.0) -> float:
     """First-order estimate of a request's remaining service time: the cost
     of its unsearched clusters plus its ungenerated tokens at the current
     EMA decode rate.  Later stages of the workflow are not modelled — slack
     is used for *ordering*, so only relative magnitudes matter.  With a
     ``shard_map``, the retrieval term models shard-mode scatter-gather:
     ``max`` over per-shard partial-scan costs plus a merge term, instead of
-    the single-worker sum."""
+    the single-worker sum.  ``pool_scale`` (static pool / effective pool)
+    inflates the estimate when workers are dead or draining."""
     from repro.core import stages
 
     ctx = stages.CostCtx(budget=budget, cost_model=cost_model, sizes=sizes,
@@ -251,28 +265,31 @@ def estimate_remaining_us(req, budget, cost_model, sizes,
     est = 0.0
     for prog, kind in stages.active_progress(req):
         est += stages.spec(kind).remaining_us(req, prog, ctx)
+    if pool_scale != 1.0:
+        est *= pool_scale
     return est
 
 
 def slo_slack_us(req, now: float, budget, cost_model, sizes,
                  default_slo_us: float, shard_map=None,
-                 merge_us: float = 0.0) -> float:
+                 merge_us: float = 0.0, pool_scale: float = 1.0) -> float:
     """deadline - now - estimated_remaining; negative -> already late."""
     slo = getattr(req, "slo_us", 0.0) or default_slo_us
     deadline = req.arrival_us + slo
-    return deadline - now - estimate_remaining_us(req, budget, cost_model,
-                                                  sizes, shard_map, merge_us)
+    return deadline - now - estimate_remaining_us(
+        req, budget, cost_model, sizes, shard_map, merge_us, pool_scale)
 
 
 def order_by_slack(reqs, now: float, budget, cost_model, sizes,
                    default_slo_us: float, shard_map=None,
-                   merge_us: float = 0.0) -> list:
+                   merge_us: float = 0.0, pool_scale: float = 1.0) -> list:
     """Wavefront order for sub-stage assembly: tightest slack first (ties
     broken by arrival so the order is deterministic)."""
     return sorted(
         reqs,
         key=lambda r: (slo_slack_us(r, now, budget, cost_model, sizes,
-                                    default_slo_us, shard_map, merge_us),
+                                    default_slo_us, shard_map, merge_us,
+                                    pool_scale),
                        r.arrival_us, r.request_id),
     )
 
@@ -318,7 +335,7 @@ class AdmissionController:
     """
 
     def __init__(self, cfg, budget, cost_model, cluster_sizes,
-                 shard_map=None):
+                 shard_map=None, lifecycle=None):
         self.cfg = cfg
         self.budget = budget
         self.cost_model = cost_model
@@ -330,6 +347,17 @@ class AdmissionController:
         self.shard_map = shard_map
         self.merge_us = float(getattr(cfg, "shard_merge_us", 0.0)
                               ) if shard_map is not None else 0.0
+        # worker lifecycle registry (serving.lifecycle.WorkerRegistry):
+        # backlog spreads over the *effective* pool, not the static size
+        self.lifecycle = lifecycle
+
+    def effective_pool(self) -> int:
+        """Workers actually able to absorb new retrieval work: the static
+        pool size with every worker HEALTHY, shrinking as workers die or
+        drain (0 = nothing can serve; backlog becomes unbounded)."""
+        if self.lifecycle is not None and not self.lifecycle.all_healthy():
+            return int(self.lifecycle.effective_pool_size())
+        return max(1, int(self.cfg.num_ret_workers))
 
     def lower_bound_us(self, req) -> float:
         """Cost-model lower bound of serving ``req`` in isolation: each graph
@@ -347,6 +375,13 @@ class AdmissionController:
         total = 0.0
         for kind in sorted(counts):
             total += counts[kind] * stages.spec(kind).min_service_us(self)
+        # impaired pool: fewer workers to overlap sub-stages onto, so even
+        # the single-pass bound stretches by the static/effective ratio
+        if self.lifecycle is not None and not self.lifecycle.all_healthy():
+            eff = self.effective_pool()
+            n_static = max(1, int(self.cfg.num_ret_workers))
+            if 0 < eff < n_static:
+                total *= n_static / eff
         return total
 
     def backlog_us(self, active) -> float:
@@ -360,9 +395,14 @@ class AdmissionController:
             estimate_remaining_us(r, self.budget, self.cost_model, self.sizes,
                                   self.shard_map, self.merge_us)
             for r in active)
+        if total <= 0.0:
+            return 0.0
+        pool = self.effective_pool()
+        if pool <= 0:
+            return float("inf")  # nothing left to serve retrieval work
         if self.shard_map is not None:
             return total
-        return total / max(1, int(self.cfg.num_ret_workers))
+        return total / pool
 
     def evaluate(self, req, now: float, queue_len: int,
                  active=()) -> AdmissionDecision:

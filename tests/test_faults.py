@@ -1,0 +1,436 @@
+"""Fault-tolerant serving: worker lifecycle, deterministic fault injection,
+and sub-stage retry/failover.
+
+Covers the recovery contract end to end:
+
+* zero-fault identity — with ``fault_tolerance=True`` and no fault plan the
+  per-request event traces are bit-identical to the knobs-off scheduler
+  (checked against the committed golden fingerprints);
+* crash recovery — in-flight sub-stages on a DEAD worker are fenced and
+  re-dispatched; a crashed *shard owner*'s parts fail over to surviving
+  workers and ``scatter_gather_search`` parity holds for surviving shards;
+* stall handling — a severely stalled worker turns SUSPECT, its in-flight
+  job is hedged onto an idle worker, and the first result wins exactly once;
+* transient failures — seeded per-dispatch failures retry with exponential
+  backoff up to the budget, then complete the request *degraded* (partial
+  top-k, flagged) instead of hanging;
+* operational lifecycle — drain/rebind/register mid-run, heartbeat fencing;
+* the journal temp-file sweep and the deterministic dispatcher tie-breaks.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import workflows
+from repro.core.backends import SimBackend
+from repro.retrieval.ivf import ClusterCostModel, TopK
+from repro.serving import dispatch
+from repro.serving.faults import (
+    FaultPlan, StallWindow, WorkerCrash, HEARTBEAT_STALL_FACTOR,
+)
+from repro.serving.lifecycle import (
+    DEAD, DRAINING, HEALTHY, JOINING, SUSPECT, WorkerRegistry,
+)
+from repro.server import Server
+
+RET_HEAVY = ClusterCostModel(fixed_us=150.0, per_vector_us=8.0,
+                             per_query_us=2.0)
+
+
+def _server(index, emb, mode="hedra", nw=4, *, sharding=False, plan=None,
+            **cfg):
+    be = SimBackend(index, emb, cost_model=RET_HEAVY, seed=0,
+                    fault_plan=plan)
+    return Server(index, emb, mode=mode, backend=be, nprobe=12, topk=5,
+                  num_ret_workers=nw, index_sharding=sharding, **cfg)
+
+
+def _load(server, n=10, name="multistep", spacing=3000.0):
+    for i in range(n):
+        server.add_request(f"q{i}", workflows.build(name),
+                           arrival_us=i * spacing)
+
+
+def _fingerprints(server):
+    return {r.request_id: [(float(t), e, repr(p)) for t, e, p in r.events]
+            for r in server.sched.done}
+
+
+def _assert_all_terminated(server, n):
+    m = server.sched.metrics
+    assert len(server.sched.active) == 0
+    assert len(server.sched.pending) == 0
+    assert m.finished + m.shed == n
+
+
+# --------------------------------------------------------------- lifecycle
+
+
+def test_registry_states_and_fencing():
+    reg = WorkerRegistry(2, suspect_after_us=150_000.0,
+                         dead_after_us=400_000.0)
+    assert reg.all_healthy() and reg.effective_pool_size() == 2
+    plan = FaultPlan(crashes=(WorkerCrash(0, 100_000.0),))
+    assert reg.tick(99_000.0, plan) == []
+    # crash at 100k: SUSPECT at 250k, DEAD at 500k — exactly at thresholds
+    assert reg.next_transition_us(99_000.0, plan) == 250_000.0
+    assert reg.tick(250_000.0, plan) == [(0, HEALTHY, SUSPECT)]
+    assert not reg.can_schedule(0) and reg.serving(0)
+    assert reg.tick(500_000.0, plan) == [(0, SUSPECT, DEAD)]
+    assert not reg.alive(0) and reg.effective_pool_size() == 1
+    # fencing: a late heartbeat cannot resurrect a dead worker
+    reg.heartbeat(0, 600_000.0)
+    assert reg.state_of(0) == DEAD
+    # DEAD is terminal for tick; the healthy worker never transitions
+    assert reg.tick(900_000.0, plan) == []
+    assert reg.state_of(1) == HEALTHY
+    timeline = [s for _, s in reg.workers[0].timeline]
+    assert timeline == [JOINING, HEALTHY, SUSPECT, DEAD]
+
+
+def test_registry_stall_suspect_and_recovery():
+    reg = WorkerRegistry(1)
+    win = StallWindow(0, 50_000.0, 300_000.0, factor=8.0)
+    assert win.pauses_heartbeats  # factor >= HEARTBEAT_STALL_FACTOR
+    assert StallWindow(0, 0.0, 1.0, factor=1.5).pauses_heartbeats is False
+    plan = FaultPlan(stalls=(win,))
+    assert reg.tick(150_000.0, plan) == []
+    assert reg.tick(200_000.0, plan) == [(0, HEALTHY, SUSPECT)]
+    # window ends at 300k: heartbeats resume, SUSPECT recovers
+    assert 300_000.0 in [reg.next_transition_us(250_000.0, plan)]
+    assert reg.tick(310_000.0, plan) == [(0, SUSPECT, HEALTHY)]
+    assert reg.all_healthy()
+
+
+def test_registry_drain_rebind_and_register():
+    reg = WorkerRegistry(2)
+    assert reg.drain(0, 10.0)
+    assert reg.state_of(0) == DRAINING
+    assert not reg.can_schedule(0) and not reg.owner_serves(0)
+    assert reg.effective_pool_size() == 1
+    assert reg.rebind(0, 20.0)
+    assert reg.state_of(0) == HEALTHY and reg.all_healthy()
+    # draining worker can still die (crash while held), then drain() fails
+    plan = FaultPlan(crashes=(WorkerCrash(0, 30_000.0),))
+    reg.drain(0, 25_000.0)
+    reg.tick(500_000.0, plan)
+    assert reg.state_of(0) == DEAD
+    assert reg.drain(0, 600_000.0) is False
+    wid = reg.register(700_000.0)
+    assert wid == 2 and reg.state_of(wid) == HEALTHY
+    with pytest.raises(ValueError):
+        reg.register(700_000.0, wid=1)
+
+
+# ------------------------------------------------------- fault determinism
+
+
+def test_fault_plan_seeded_determinism():
+    a = FaultPlan.random(7, 4, 2_000_000.0, transient_prob=0.1)
+    b = FaultPlan.random(7, 4, 2_000_000.0, transient_prob=0.1)
+    assert a.describe() == b.describe()
+    assert [a.transient_fault(1, s) for s in range(64)] \
+        == [b.transient_fault(1, s) for s in range(64)]
+    # at most n-1 workers crash: the pool never starts fully dead
+    assert len({c.wid for c in a.crashes}) <= 3
+    c = FaultPlan.random(8, 4, 2_000_000.0, transient_prob=0.1)
+    assert a.describe() != c.describe()
+
+
+def test_stall_factor_inflates_latency_only_in_window():
+    plan = FaultPlan(stalls=(StallWindow(1, 100.0, 200.0, factor=4.0),))
+    assert plan.stall_factor(1, 150.0) == 4.0
+    assert plan.stall_factor(1, 250.0) == 1.0
+    assert plan.stall_factor(0, 150.0) == 1.0
+    assert plan.is_empty is False and FaultPlan().is_empty
+
+
+# -------------------------------------------------------- zero-fault identity
+
+
+GOLDEN_NAMES = ["one-shot", "hyde", "irg", "multistep", "recomp"]
+
+
+@pytest.mark.parametrize("mode", ["hedra", "async", "sequential"])
+@pytest.mark.parametrize("nw", [1, 4])
+def test_ft_enabled_zero_faults_matches_golden_fingerprints(
+        mode, nw, small_index, embedder):
+    """fault_tolerance=True with no fault plan must leave every per-request
+    event trace bit-identical to the committed golden fingerprints — the
+    same harness as scripts/make_golden_fingerprints.py, with the
+    fault-tolerance machinery armed."""
+    import hashlib
+
+    from repro.serving.workload import poisson_arrivals
+
+    golden_path = os.path.join(os.path.dirname(__file__),
+                               "golden_fingerprints.json")
+    with open(golden_path) as f:
+        golden = json.load(f)
+    be = SimBackend(small_index, embedder, cost_model=RET_HEAVY, seed=0)
+    s = Server(small_index, embedder, mode=mode, backend=be,
+               nprobe=12, topk=5, num_ret_workers=nw, fault_tolerance=True)
+    for i, t in enumerate(poisson_arrivals(8.0, 20, seed=5)):
+        s.add_request(f"q{i}", workflows.build(GOLDEN_NAMES[i % 5]),
+                      arrival_us=float(t))
+    m = s.run()
+    assert m.finished == 20
+    fp = {r.request_id: [(float(t), e, repr(p)) for t, e, p in r.events]
+          for r in s.sched.done}
+    blob = json.dumps(fp, sort_keys=True).encode()
+    assert hashlib.sha256(blob).hexdigest() == golden[f"{mode}-nw{nw}"]
+
+
+# --------------------------------------------------------- crash recovery
+
+
+def test_crash_redispatches_inflight_substage(small_index, embedder):
+    """A worker crash mid-job fences the lost results and re-dispatches the
+    sub-stage on a surviving worker; every request still completes."""
+    plan = FaultPlan(crashes=(WorkerCrash(2, 95_000.0),))
+    s = _server(small_index, embedder, plan=plan)
+    _load(s, 10)
+    m = s.run()
+    _assert_all_terminated(s, 10)
+    assert m.worker_deaths == 1
+    assert m.redispatches >= 1
+    rep = s.lifecycle_report()
+    assert rep["workers"][2]["state"] == DEAD
+    assert rep["counters"]["redispatches"] == m.redispatches
+
+
+def test_acceptance_shard_owner_crash_with_transient_scatter_failures(
+        small_index, embedder):
+    """The issue's acceptance scenario: kill 1 of 4 workers — a shard owner
+    — mid-run with transient scatter failures injected.  Every request must
+    terminate (finished, shed, or degraded-complete) and the function-level
+    ``scatter_gather_search`` parity must hold for the surviving shards."""
+    from repro.retrieval.distributed import ShardMap, scatter_gather_search
+
+    plan = FaultPlan(crashes=(WorkerCrash(1, 80_000.0),),
+                     transient_fail_prob=0.1, seed=11)
+    s = _server(small_index, embedder, sharding=True, plan=plan)
+    _load(s, 10)
+    m = s.run()
+    _assert_all_terminated(s, 10)
+    assert m.worker_deaths == 1
+    assert s.sched.lifecycle.state_of(1) == DEAD
+    assert m.transient_failures >= 1
+    rep = s.shard_report()
+    assert rep["failovers"] == m.failovers
+    assert rep["degraded_completions"] == m.degraded_completions
+
+    # surviving-shard parity: the scatter-gather path restricted to the
+    # surviving shards equals an independent per-cluster merge oracle over
+    # the same filtered probe lists
+    sm = s.sched.shard_map
+    survivors = {w for w in range(sm.n_shards)
+                 if s.sched.lifecycle.alive(w)}
+    rng = np.random.default_rng(0)
+    q = rng.standard_normal((4, small_index.dim)).astype(np.float32)
+    D, I = scatter_gather_search(small_index, q, 16, 5, sm,
+                                 shards=survivors)
+    # oracle: one whole-plan scan over the same filtered probe lists
+    from repro.retrieval.plan import PlanBuilder
+
+    probes = small_index.probe_order(q, 16)
+    b = PlanBuilder()
+    for r in range(q.shape[0]):
+        kept = [int(c) for c in probes[r]
+                if int(sm.owner[c]) in survivors]
+        b.add(q[r], kept, k=5)
+    ref = b.build()
+    res = ref.finalize(small_index.search_plan(ref))
+    np.testing.assert_array_equal(D, res.dists[:, :5])
+    np.testing.assert_array_equal(I, res.ids[:, :5])
+    # with every shard surviving, the restriction is the identity
+    D0, I0 = scatter_gather_search(small_index, q, 16, 5, sm)
+    D1, I1 = scatter_gather_search(small_index, q, 16, 5, sm,
+                                   shards=set(range(sm.n_shards)))
+    np.testing.assert_array_equal(D0, D1)
+    np.testing.assert_array_equal(I0, I1)
+
+
+def test_whole_pool_death_degrades_instead_of_hanging(small_index, embedder):
+    plan = FaultPlan(crashes=tuple(WorkerCrash(w, 95_000.0 + w)
+                                   for w in range(4)))
+    s = _server(small_index, embedder, plan=plan)
+    _load(s, 10)
+    m = s.run()
+    _assert_all_terminated(s, 10)
+    assert m.worker_deaths == 4
+    assert m.degraded_completions >= 1
+    assert m.degraded_drops >= 1
+    # degraded requests carry the flag and the event
+    degraded = [r for r in s.sched.done if r.state.get("_degraded")]
+    assert len(degraded) == m.degraded_completions
+    assert all(any(e == "degraded" for _, e, _ in r.events)
+               for r in degraded)
+
+
+# ------------------------------------------------------------ stall/hedging
+
+
+def test_stall_turns_suspect_and_hedges_first_result_wins(small_index,
+                                                          embedder):
+    """A 12x stall on the busy worker blows its job past the cost-model
+    deadline: the worker turns SUSPECT, the in-flight retrieval group is
+    duplicated onto an idle worker, and exactly one copy's result applies."""
+    plan = FaultPlan(stalls=(StallWindow(2, 90_000.0, 3_000_000.0,
+                                         factor=12.0),))
+    s = _server(small_index, embedder, plan=plan)
+    _load(s, 10)
+    m = s.run()
+    _assert_all_terminated(s, 10)
+    assert m.worker_suspects >= 1
+    assert m.task_timeouts >= 1
+    assert m.hedged_dispatches >= 1
+    assert m.hedged_wins >= 1
+    assert m.hedged_wins <= m.hedged_dispatches
+    assert m.degraded_completions == 0  # hedging rescued them, not degrading
+
+
+def test_hedging_can_be_disabled(small_index, embedder):
+    plan = FaultPlan(stalls=(StallWindow(2, 90_000.0, 3_000_000.0,
+                                         factor=12.0),))
+    s = _server(small_index, embedder, plan=plan, hedge_suspect=False)
+    _load(s, 10)
+    m = s.run()
+    _assert_all_terminated(s, 10)
+    assert m.hedged_dispatches == 0
+
+
+# -------------------------------------------------------- transient retries
+
+
+def test_transient_failures_retry_then_degrade(small_index, embedder):
+    """With every dispatch failing, the per-(request, node) retry budget is
+    exhausted and stages complete degraded rather than looping forever."""
+    plan = FaultPlan(transient_fail_prob=1.0, seed=3)
+    s = _server(small_index, embedder, plan=plan, retry_budget=2,
+                retry_backoff_us=5_000.0)
+    _load(s, 6)
+    m = s.run()
+    _assert_all_terminated(s, 6)
+    assert m.transient_failures >= 1
+    assert m.retries >= 1
+    assert m.degraded_drops >= 1
+    assert m.degraded_completions >= 1
+
+
+def test_moderate_transients_recover_cleanly(small_index, embedder):
+    plan = FaultPlan(transient_fail_prob=0.15, seed=5)
+    s = _server(small_index, embedder, plan=plan)
+    _load(s, 10)
+    m = s.run()
+    _assert_all_terminated(s, 10)
+    assert m.retries >= 1
+    assert m.finished == 10
+
+
+# --------------------------------------------------- operational lifecycle
+
+
+def test_drain_rebind_and_register_mid_run(small_index, embedder):
+    s = _server(small_index, embedder, nw=2, fault_tolerance=True)
+    _load(s, 6, spacing=2000.0)
+    s.step(5_000.0)
+    assert s.drain_worker(0)
+    assert s.sched.lifecycle.state_of(0) == DRAINING
+    s.step(40_000.0)
+    wid = s.register_worker()
+    assert wid == 2
+    assert s.sched.num_ret_workers == 3
+    assert s.rebind_worker(0)
+    assert s.sched.lifecycle.state_of(0) == HEALTHY
+    m = s.run()
+    _assert_all_terminated(s, 6)
+    assert m.finished == 6
+    rep = s.lifecycle_report()
+    assert rep["num_workers"] == 3
+    states = [st for _, st in rep["workers"][0]["timeline"]]
+    assert DRAINING in states and states[-1] == HEALTHY
+
+
+def test_admission_sees_effective_pool(small_index, embedder):
+    """Backlog per-worker estimates divide by the *effective* pool size:
+    draining workers shrink it and inflate the backlog estimate."""
+    s = _server(small_index, embedder, nw=4, fault_tolerance=True,
+                admission_control=True)
+    _load(s, 8)
+    adm = s.sched.admission
+    assert adm.effective_pool() == 4
+    full = adm.backlog_us(s.sched.pending + s.sched.active)
+    s.drain_worker(2)
+    s.drain_worker(3)
+    assert adm.effective_pool() == 2
+    half = adm.backlog_us(s.sched.pending + s.sched.active)
+    assert half >= full * 1.9
+    for w in (2, 3):
+        s.rebind_worker(w)
+    assert adm.effective_pool() == 4
+    m = s.run()
+    assert m.finished == 8
+
+
+# ------------------------------------------------------ deterministic chaos
+
+
+def test_same_seed_same_chaos_fingerprints(small_index, embedder):
+    """Replaying the identical FaultPlan seed yields bit-identical event
+    traces — the whole recovery path is deterministic."""
+    fps = []
+    for _ in range(2):
+        plan = FaultPlan.random(13, 4, 1_500_000.0, transient_prob=0.1)
+        s = _server(small_index, embedder, sharding=True, plan=plan)
+        _load(s, 10)
+        s.run()
+        fps.append(_fingerprints(s))
+    assert fps[0] == fps[1]
+
+
+# ------------------------------------------------ journal temp-file sweep
+
+
+def test_journal_tmp_sweep_on_start_and_write(small_index, embedder,
+                                              tmp_path):
+    journal = str(tmp_path / "journal.jsonl")
+    stale = journal + ".tmp.99999"
+    with open(stale, "w") as f:
+        f.write('{"half": "written"')  # crashed mid-write, never replaced
+    s = Server(small_index, embedder, mode="hedra", num_ret_workers=1,
+               journal_path=journal)
+    assert not os.path.exists(stale)  # swept on journal-backed start
+    s.add_request("q0", workflows.build("one-shot"), arrival_us=0.0)
+    with open(stale, "w") as f:
+        f.write("orphan from a previous pid")
+    s.run()  # write_journal sweeps after the atomic replace
+    assert os.path.exists(journal)
+    assert not os.path.exists(stale)
+    assert [p for p in os.listdir(tmp_path) if ".tmp." in p] == []
+    # the journal itself survived and is readable
+    rows = Server.read_journal(journal)
+    assert len(rows) == 1 and rows[0]["finished"]
+
+
+# ----------------------------------------------- dispatcher determinism
+
+
+def test_least_loaded_deterministic_tie_break():
+    d = dispatch.RetrievalDispatcher(num_workers=4, n_clusters=32)
+    # all loads equal: lowest wid must win, in any candidate order
+    assert d.least_loaded([3, 1, 2, 0]) == 0
+    assert d.least_loaded([2, 3]) == 2
+    d.note_busy(0, 100.0)  # load on 0
+    assert d.least_loaded([0, 1]) == 1
+    # equal explicit extra load keeps the wid tie-break
+    assert d.least_loaded([3, 2], extra_load={2: 5.0, 3: 5.0}) == 2
+
+
+def test_add_worker_grows_pool():
+    d = dispatch.RetrievalDispatcher(num_workers=2, n_clusters=16)
+    wid = d.add_worker()
+    assert wid == 2 and d.num_workers == 3
+    assert d.least_loaded([0, 1, 2]) == 0

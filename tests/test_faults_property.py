@@ -1,0 +1,104 @@
+"""Property suite for fault-tolerant serving: random FaultPlans over random
+workflow mixes, modes, and sharding settings must never hang a request —
+every submitted request ends finished, shed, or degraded-complete — and the
+whole chaos run is deterministic (same seed, same per-request event traces).
+
+Runs under hypothesis when installed (CI installs it explicitly); otherwise
+falls back to a fixed seeded sweep of the same properties so the suite never
+silently skips."""
+import numpy as np
+import pytest
+
+from repro import workflows
+from repro.core.backends import SimBackend
+from repro.retrieval.ivf import ClusterCostModel
+from repro.server import Server
+from repro.serving.faults import FaultPlan
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # local envs without hypothesis: seeded sweep instead
+    HAVE_HYPOTHESIS = False
+
+RET_HEAVY = ClusterCostModel(fixed_us=150.0, per_vector_us=8.0,
+                             per_query_us=2.0)
+FALLBACK_SEEDS = list(range(24))
+NAMES = ["one-shot", "hyde", "irg", "multistep", "recomp",
+         "rerank", "multiquery", "hybrid", "compress", "pipeline"]
+MODES = ["hedra", "async", "sequential"]
+
+
+def _property(n_examples):
+    """Decorator: hypothesis-driven seeds when available, a fixed
+    parametrized sweep otherwise.  The wrapped test takes ``seed`` last."""
+    if HAVE_HYPOTHESIS:
+        return lambda fn: settings(
+            max_examples=n_examples, deadline=None,
+            suppress_health_check=[HealthCheck.too_slow],
+        )(given(seed=st.integers(0, 2**32 - 1))(fn))
+    return lambda fn: pytest.mark.parametrize(
+        "seed", FALLBACK_SEEDS[:n_examples])(fn)
+
+
+def _chaos_run(index, emb, seed):
+    """One randomized chaos serve.  Returns (server, metrics, n_submitted)."""
+    rng = np.random.default_rng(seed)
+    nw = int(rng.integers(1, 5))
+    mode = MODES[int(rng.integers(0, len(MODES)))]
+    sharding = bool(rng.integers(0, 2)) and nw > 1
+    n = int(rng.integers(4, 9))
+    plan = FaultPlan.random(
+        int(rng.integers(0, 2**31)), nw, 1_200_000.0,
+        crash_frac=float(rng.uniform(0.0, 0.5)),
+        stall_rate=float(rng.uniform(0.0, 1.0)),
+        stall_factor=float(rng.uniform(2.0, 10.0)),
+        transient_prob=float(rng.uniform(0.0, 0.3)))
+    be = SimBackend(index, emb, cost_model=RET_HEAVY, seed=0,
+                    fault_plan=plan)
+    s = Server(index, emb, mode=mode, backend=be, nprobe=12, topk=5,
+               num_ret_workers=nw, index_sharding=sharding,
+               retry_backoff_us=float(rng.uniform(2_000.0, 40_000.0)),
+               retry_budget=int(rng.integers(1, 4)),
+               hedge_suspect=bool(rng.integers(0, 2)))
+    for i in range(n):
+        s.add_request(f"q{i}", workflows.build(
+            NAMES[int(rng.integers(0, len(NAMES)))]),
+            arrival_us=float(rng.uniform(0.0, 60_000.0) + i * 2_000.0))
+    m = s.run()
+    return s, m, n
+
+
+@_property(18)
+def test_every_request_terminates_under_chaos(small_index, embedder, seed):
+    """Liveness: no combination of crashes, stalls, and transient failures
+    may strand a request — the run drains, nothing stays active or pending,
+    and finished + shed covers every submission (degraded completions are
+    finished requests, counted once)."""
+    s, m, n = _chaos_run(small_index, embedder, seed)
+    assert s.sched.active == []
+    assert s.sched.pending == []
+    assert m.finished + m.shed == n
+    assert m.degraded_completions <= m.finished
+    assert m.hedged_wins <= m.hedged_dispatches
+    # every done request carries a terminal finish event
+    for r in s.sched.done:
+        assert r.finished
+        if r.state.get("_degraded"):
+            assert any(e == "degraded" for _, e, _ in r.events)
+
+
+@_property(8)
+def test_same_seed_identical_event_traces(small_index, embedder, seed):
+    """Determinism: replaying the same chaos seed reproduces every
+    per-request event trace bit-for-bit (and therefore every counter)."""
+    runs = []
+    for _ in range(2):
+        s, m, _ = _chaos_run(small_index, embedder, seed)
+        fp = {r.request_id: [(float(t), e, repr(p)) for t, e, p in r.events]
+              for r in s.sched.done}
+        runs.append((fp, m.summary()))
+    assert runs[0][0] == runs[1][0]
+    assert runs[0][1] == runs[1][1]
