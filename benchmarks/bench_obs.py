@@ -1,0 +1,153 @@
+"""Observability layer: recording overhead + latency attribution profile.
+
+Three questions, one serving scenario (the paper five as a Poisson stream
+on a 4-worker pool):
+
+* **Overhead** — the obs taps must be cheap enough to leave on: identical
+  runs with tracing+telemetry off vs on, reported as wall-clock overhead
+  per request.  (Virtual-clock behaviour is bit-identical by construction
+  — the fingerprint tests pin that; this measures the host-side cost.)
+* **Attribution** — where each mode's latency actually goes: per-mode
+  queueing / retrieval / generation fractions and the bottleneck
+  component from ``Server.attribution_report()``.
+* **Recovery structure** — the same profile under a seeded FaultPlan: how
+  much of the latency budget retry backoff and fault recovery consume.
+
+The metrics snapshot and attribution summaries land in
+``common.ARTIFACTS`` (embedded in ``run.py --json`` records); standalone
+``--trace-out``/``--metrics-out`` write the sample trace and snapshot
+files the CI smoke uploads as workflow artifacts.
+
+Standalone: ``python benchmarks/bench_obs.py --quick [--json out.json]
+[--trace-out trace.json] [--metrics-out metrics.json]``; also runs via
+``benchmarks/run.py --only obs``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import (  # noqa: E402
+    ARTIFACTS,
+    emit,
+    fixture,
+    load_requests,
+    make_server,
+)
+from repro.obs.trace import validate_trace  # noqa: E402
+from repro.serving.faults import FaultPlan  # noqa: E402
+
+NW = 4
+RATE = 12.0
+
+# one server kept alive so standalone --trace-out/--metrics-out can export
+# from the exact run that was measured
+_LAST: dict = {}
+
+
+def _serve(index, embedder, mode: str, n: int, *, obs: bool,
+           fault_plan=None):
+    s = make_server(index, embedder, mode, num_ret_workers=NW,
+                    tracing=obs, telemetry=obs, fault_plan=fault_plan)
+    load_requests(s, n, RATE)
+    t0 = time.perf_counter()
+    m = s.run()
+    return s, m, time.perf_counter() - t0
+
+
+def run(quick: bool = True) -> None:
+    n = 40 if quick else 120
+    index, embedder = fixture()
+    # overhead: same scenario, taps off vs on (warm both paths once first
+    # so one-time imports/JIT don't land on either side of the diff)
+    _serve(index, embedder, "hedra", 8, obs=False)
+    _serve(index, embedder, "hedra", 8, obs=True)
+    _, m_off, wall_off = _serve(index, embedder, "hedra", n, obs=False)
+    s_on, m_on, wall_on = _serve(index, embedder, "hedra", n, obs=True)
+    assert m_on.finished == m_off.finished
+    over_us = (wall_on - wall_off) / max(m_on.finished, 1) * 1e6
+    emit("obs_overhead_per_req", max(over_us, 0.0),
+         f"wall_off_s={wall_off:.2f}_wall_on_s={wall_on:.2f}"
+         f"_spans={len(s_on.sched.obs.spans)}"
+         f"_samples={len(s_on.sched.telemetry.samples)}")
+    _LAST["server"] = s_on
+
+    # attribution profile per mode
+    for mode in ("hedra", "async", "sequential"):
+        s, m, _ = ((s_on, m_on, 0.0) if mode == "hedra"
+                   else _serve(index, embedder, mode, n, obs=True))
+        rep = s.attribution_report()
+        fr = rep["fractions"]
+        emit(f"obs_attribution_{mode}", fr["queueing"] * 1e6,
+             f"queue={fr['queueing']:.3f}"
+             f"_ret={fr['retrieval_compute']:.3f}"
+             f"_gen={fr['generation_compute']:.3f}"
+             f"_bottleneck={rep['bottleneck']}"
+             f"_resid={rep['max_rel_residual']:.1e}")
+        ARTIFACTS.setdefault("obs_attribution", {})[mode] = {
+            k: rep[k] for k in ("finished", "totals_us", "fractions",
+                                "bottleneck", "max_rel_residual")}
+
+    # recovery structure under injected faults
+    plan = FaultPlan.random(11, NW, n / RATE * 1e6 + 1e6,
+                            transient_prob=0.05)
+    s_f, m_f, _ = _serve(index, embedder, "hedra", n, obs=True,
+                         fault_plan=plan)
+    rep = s_f.attribution_report()
+    fr = rep["fractions"]
+    emit("obs_attribution_faults",
+         (fr["retry_hedge_failover"] + fr["fault_recovery"]) * 1e6,
+         f"retry={fr['retry_hedge_failover']:.3f}"
+         f"_faultrec={fr['fault_recovery']:.3f}"
+         f"_deaths={m_f.worker_deaths}_retries={m_f.retries}"
+         f"_resid={rep['max_rel_residual']:.1e}")
+    ARTIFACTS["obs_attribution_faults"] = {
+        k: rep[k] for k in ("finished", "totals_us", "fractions",
+                            "bottleneck", "max_rel_residual")}
+
+    # registry snapshot (sampled queue depth / utilization / lifecycle)
+    snap = s_on.metrics_snapshot()
+    emit("obs_snapshot", len(snap["timeline"]),
+         f"samples={len(snap['timeline'])}"
+         f"_families={len(snap['metrics'])}"
+         f"_prom_lines={len(snap['prometheus'].splitlines())}")
+    snap.pop("prometheus", None)  # keep the artifact JSON compact
+    ARTIFACTS["obs_metrics_snapshot"] = snap
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="",
+                    help="write the emitted rows + artifacts as JSON")
+    ap.add_argument("--trace-out", default="",
+                    help="export the measured run's Perfetto trace here")
+    ap.add_argument("--metrics-out", default="",
+                    help="export the measured run's metrics snapshot here")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=args.quick)
+    if args.trace_out:
+        trace = _LAST["server"].export_trace(args.trace_out)
+        probs = validate_trace(trace)
+        assert not probs, probs[:5]
+        print(f"# wrote {args.trace_out} "
+              f"({len(trace['traceEvents'])} events)", file=sys.stderr)
+    if args.metrics_out:
+        _LAST["server"].metrics_snapshot(args.metrics_out)
+        print(f"# wrote {args.metrics_out}", file=sys.stderr)
+    if args.json:
+        from benchmarks import common
+
+        with open(args.json, "w") as f:
+            json.dump({"rows": common.RESULTS,
+                       "artifacts": common.ARTIFACTS}, f, indent=1)
+        print(f"# wrote {args.json} ({len(common.RESULTS)} rows)",
+              file=sys.stderr)

@@ -76,6 +76,10 @@ def load_requests(server: Server, n: int, rate: float, names=None, seed: int = 1
 # rows emitted by the current process, harvested by run.py --json
 RESULTS: list[dict] = []
 
+# structured side-products (e.g. bench_obs' metrics snapshot / attribution
+# summary), embedded under "artifacts" in the run.py --json record
+ARTIFACTS: dict = {}
+
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     RESULTS.append(

@@ -25,6 +25,7 @@ MODULES = [
     ("serving", "benchmarks.bench_serving"),          # streaming goodput sweep
     ("sharded_serving", "benchmarks.bench_sharded_serving"),  # shard-mode scatter-gather
     ("faults", "benchmarks.bench_faults"),            # goodput under injected faults
+    ("obs", "benchmarks.bench_obs"),                  # tracing overhead + attribution
     ("plan", "benchmarks.bench_plan"),                # SoA sub-stage executor
     ("crossreq", "benchmarks.bench_crossreq"),        # cross-request layer
     ("speculation", "benchmarks.bench_speculation"),  # Fig. 17
@@ -72,6 +73,9 @@ def main() -> None:
                 "module_times_s": module_times,
             },
             "rows": common.RESULTS,
+            # structured side-products (bench_obs metrics snapshot /
+            # attribution summaries); empty when those modules didn't run
+            "artifacts": common.ARTIFACTS,
         }
         with open(args.json, "w") as f:
             json.dump(record, f, indent=1)

@@ -123,6 +123,18 @@ class SchedulerConfig:
     retry_backoff_us: float = 20_000.0
     hedge_suspect: bool = True
     failover_whole_index: bool = True
+    # --- observability (obs/): both layers are passive read-only taps —
+    # enabling them changes no scheduling decision, RNG draw, or per-request
+    # event log, so traces stay bit-identical to the knobs-off goldens.
+    # tracing feeds an obs.trace.TraceRecorder (per-resource spans + flow
+    # edges, exported as Chrome trace-event / Perfetto JSON and decomposed
+    # by obs.attribution); telemetry attaches an
+    # obs.registry.TelemetrySampler that samples queue depth, per-worker
+    # utilization and lifecycle states every telemetry_interval_us of
+    # virtual time into a labeled Prometheus-style registry.
+    tracing: bool = False
+    telemetry: bool = False
+    telemetry_interval_us: float = 50_000.0
 
     @classmethod
     def preset(cls, mode: str, **kw) -> "SchedulerConfig":
@@ -141,6 +153,20 @@ class SchedulerConfig:
             base.update(kw)
             return cls(mode="sequential", **base)
         raise ValueError(mode)
+
+
+# version of the summary()/window_summary() dict schema (bumped when keys
+# are added/renamed/removed); documented in benchmarks/README.md
+SUMMARY_SCHEMA_VERSION = 2
+
+
+def _lat_ms(lat: "np.ndarray", q=None) -> float:
+    """Latency statistic in milliseconds with the NaN-on-empty convention:
+    ``q`` is a percentile (e.g. 50, 95), or None for the mean."""
+    if not lat.size:
+        return float("nan")
+    v = lat.mean() if q is None else np.percentile(lat, q)
+    return float(v / 1e3)
 
 
 @dataclasses.dataclass
@@ -219,16 +245,18 @@ class Metrics:
         rows = [f for f in self.finish_log if start_us <= f[0] < end_us]
         lat = np.asarray([l for _, l, _ in rows], np.float64)
         good = sum(1 for _, _, u in rows if u)
-        return {
+        out = {
+            "schema_version": SUMMARY_SCHEMA_VERSION,
             "window_start_us": float(start_us),
             "window_end_us": float(end_us),
             "finished": len(rows),
             "finished_under_slo": int(good),
             "throughput_rps": len(rows) / (span / 1e6),
             "goodput_rps": good / (span / 1e6),
-            "p50_latency_ms": float(np.percentile(lat, 50) / 1e3) if lat.size else float("nan"),
-            "p95_latency_ms": float(np.percentile(lat, 95) / 1e3) if lat.size else float("nan"),
+            "p50_latency_ms": _lat_ms(lat, 50),
+            "p95_latency_ms": _lat_ms(lat, 95),
         }
+        return {k: out[k] for k in sorted(out)}
 
     def goodput_timeline(self, window_us: float, step_us: float = 0.0) -> list:
         """Sliding-window goodput samples ``[(t_end_us, goodput_rps), ...]``
@@ -272,11 +300,12 @@ class Metrics:
         else:
             steady = None
         good = sum(1 for _, _, u in self.finish_log if u)
-        return {
+        out = {
+            "schema_version": SUMMARY_SCHEMA_VERSION,
             "finished": self.finished,
-            "avg_latency_ms": float(lat.mean() / 1e3) if lat.size else float("nan"),
-            "p50_latency_ms": float(np.percentile(lat, 50) / 1e3) if lat.size else float("nan"),
-            "p95_latency_ms": float(np.percentile(lat, 95) / 1e3) if lat.size else float("nan"),
+            "avg_latency_ms": _lat_ms(lat),
+            "p50_latency_ms": _lat_ms(lat, 50),
+            "p95_latency_ms": _lat_ms(lat, 95),
             "throughput_rps": self.finished / (t / 1e6),
             "goodput_rps": good / (t / 1e6),
             "steady_throughput_rps": steady["throughput_rps"]
@@ -340,6 +369,9 @@ class Metrics:
             "cache_replicated_clusters": int(
                 self.cache_stats.get("replicated_clusters", 0)),
         }
+        # deterministic key order: consumers diffing two summaries (or
+        # serializing to JSON without sort_keys) see a stable layout
+        return {k: out[k] for k in sorted(out)}
 
 
 @dataclasses.dataclass
@@ -449,6 +481,19 @@ class WavefrontScheduler:
             self.ft = _FaultState(plan=fault_plan)
         self.metrics = Metrics()
         self.metrics.ret_busy_per_worker = [0.0] * self.num_ret_workers
+        # observability taps (obs/): lazily imported so the default path
+        # never loads the package; both are purely passive recorders
+        self.obs = None
+        self.telemetry = None
+        if config.tracing:
+            from repro.obs.trace import TraceRecorder
+
+            self.obs = TraceRecorder()
+        if config.telemetry:
+            from repro.obs.registry import TelemetrySampler
+
+            self.telemetry = TelemetrySampler(
+                interval_us=config.telemetry_interval_us)
         # arrival queue: heap keyed (arrival_us, request_id) — O(log n)
         # admission instead of the old sort-on-every-insert list
         self._pending: list[tuple[float, int, RequestContext]] = []
@@ -495,8 +540,14 @@ class WavefrontScheduler:
                 else:
                     self.metrics.shed_infeasible += 1
                 req.state["_shed"] = dec.reason
+                if self.obs is not None:
+                    self.obs.request_shed(req, self.now, dec.reason)
+                if self.telemetry is not None:
+                    self.telemetry.on_shed(req, dec.reason)
                 return False
         self.metrics.submitted += 1
+        if self.obs is not None:
+            self.obs.request_submitted(req, self.now)
         heapq.heappush(self._pending,
                        (float(req.arrival_us), req.request_id, req))
         return True
@@ -611,6 +662,8 @@ class WavefrontScheduler:
                         or not sub.stage.parked):
                     continue
                 self.metrics.dedup_fanout += 1
+                if self.obs is not None:
+                    self.obs.fanout(req, sub, now, "stage")
                 sp.adopt_from_leader(self, sub, req, match, now)
         req.stage = None
         self._advance_request(req, now)
@@ -650,6 +703,8 @@ class WavefrontScheduler:
             sub.ret.cluster_queue = []
             sub.ret._inflight = False  # type: ignore[attr-defined]
             self.metrics.dedup_fanout += 1
+            if self.obs is not None:
+                self.obs.fanout(req, sub, now, kind)
             self._finish_ret_stage(sub, now)
 
     def _finish_gen_stage(self, req: RequestContext, now: float) -> None:
@@ -682,6 +737,10 @@ class WavefrontScheduler:
             self.metrics.degraded_completions += 1
         self.active.remove(req)
         self.done.append(req)
+        if self.obs is not None:
+            self.obs.request_finished(req, now)
+        if self.telemetry is not None:
+            self.telemetry.on_finish(req, now)
         self.dag.gc()
 
     def _prime_probe_orders(self, reqs: list, now: float) -> None:
@@ -784,6 +843,10 @@ class WavefrontScheduler:
             job["deadline"] = (now + charge * self.cfg.timeout_factor
                                + self.cfg.sched_overhead_us)
             self._ft_register_job(job, wid, hedge_tokens)
+        if self.obs is not None:
+            self.obs.ret_job(job, wid, now, hedge=hedge_tokens is not None)
+        if self.telemetry is not None:
+            self.telemetry.on_ret_job(job, wid)
         return job
 
     def _add_ret_group(self, builder: PlanBuilder, r: RequestContext,
@@ -851,6 +914,8 @@ class WavefrontScheduler:
                     assign.append((shard, wid, part))
                     taken.add(shard)
                     self.metrics.failovers += 1
+                    if self.obs is not None:
+                        self.obs.failover(r, wid, now)
                 elif not can_wait:
                     dropped.add(shard)
                 continue
@@ -919,6 +984,8 @@ class WavefrontScheduler:
         run the same stage-completion logic the unsharded path runs."""
         r = gather.req
         self.metrics.shard_merges += 1
+        if self.obs is not None:
+            self.obs.gather_merge(gather, now)
         if r.finished or r.ret is None:
             return
         res = gather.plan.finalize(gather.board)
@@ -1281,7 +1348,9 @@ class WavefrontScheduler:
         backoffs, mark jobs past their cost-model deadline, and hedge
         in-flight work of timed-out or SUSPECT workers."""
         ft = self.ft
-        for wid, _old, new in self.lifecycle.tick(now, ft.plan):
+        for wid, old, new in self.lifecycle.tick(now, ft.plan):
+            if self.obs is not None:
+                self.obs.worker_transition(wid, old, new, now)
             if new == lifecycle_mod.SUSPECT:
                 self.metrics.worker_suspects += 1
             elif new == lifecycle_mod.DEAD:
@@ -1342,6 +1411,8 @@ class WavefrontScheduler:
                 continue  # a hedge twin still runs this unit
             del ft.units[tok]
             self.metrics.redispatches += 1
+            if self.obs is not None:
+                self.obs.open_gap(self._unit_req(unit), now, "fault_recovery")
             self._ft_requeue_unit(unit, now)
 
     def _ft_settle_group(self, job, g: int, now: float) -> bool:
@@ -1421,6 +1492,8 @@ class WavefrontScheduler:
             self._ft_degrade_unit(unit, now)
             return
         self.metrics.retries += 1
+        if self.obs is not None:
+            self.obs.open_gap(r, now, "retry_hedge_failover")
         back = self.cfg.retry_backoff_us * (2.0 ** (att - 1))
         ft.not_before[r.request_id] = max(
             ft.not_before.get(r.request_id, 0.0), now + back)
@@ -1539,6 +1612,8 @@ class WavefrontScheduler:
             self._ret_fifo.append(r)
 
     def _flag_degraded(self, r: RequestContext, now: float) -> None:
+        if self.obs is not None and not r.state.get("_degraded"):
+            self.obs.degraded(r, now)
         r.state["_degraded"] = True
         r.log(now, "degraded", r.current)
 
@@ -1626,6 +1701,8 @@ class WavefrontScheduler:
                                       hedge_tokens=tokens)
         hjob["hedge"] = True
         self._ret_jobs[wid2] = hjob
+        if self.obs is not None:
+            self.obs.hedge_link(job, hjob, now)
         return g_new
 
     def _pick_failover_worker(self, part, idle, cycle_load):
@@ -1695,6 +1772,8 @@ class WavefrontScheduler:
             self.metrics.shard_parts += 1
             if wid != shard:
                 self.metrics.failovers += 1
+                if self.obs is not None:
+                    self.obs.failover(r, wid, now)
         ft.orphan_parts = keep
 
     # ------------------------------------------------------------ main loop
@@ -1718,6 +1797,8 @@ class WavefrontScheduler:
         """
         now = self.now
         nw = self.num_ret_workers
+        if self.telemetry is not None:
+            self.telemetry.maybe_sample(self, now)
         if self.ft is not None:
             self._ft_tick(now)
         if (not self.lifecycle.all_healthy()
@@ -1751,6 +1832,11 @@ class WavefrontScheduler:
                            (self._gen_job is not None or ret_inflight))
         if self._gen_job is None and not sequential_lock:
             self._gen_job = self._assemble_gen(now)
+            if self._gen_job is not None:
+                if self.obs is not None:
+                    self.obs.gen_job(self._gen_job, now)
+                if self.telemetry is not None:
+                    self.telemetry.on_gen_job(self._gen_job)
         sequential_lock = (self.cfg.mode == "sequential" and
                            (self._gen_job is not None or ret_inflight))
         if self.lifecycle.all_healthy():
@@ -1821,6 +1907,8 @@ class WavefrontScheduler:
                 # units are recovered when missed heartbeats declare it
                 # DEAD (lifecycle transition instants are in the events)
                 job["lost"] = True
+                if self.obs is not None:
+                    self.obs.ret_job_lost(job, now)
                 continue
             # the dispatcher is the single policy-side load source;
             # Metrics mirrors its completed share instead of
@@ -1890,6 +1978,8 @@ class WavefrontScheduler:
 
     def _finalize_metrics(self) -> Metrics:
         self.metrics.sim_time_us = self.now
+        if self.telemetry is not None:
+            self.telemetry.finalize(self, self.now)
         hyb = getattr(self.backend, "hybrid", None)
         if hyb is not None:
             self.metrics.cache_stats = hyb.stats()

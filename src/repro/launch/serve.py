@@ -48,6 +48,13 @@ def main() -> None:
                     help="fraction of the pool crashed by the fault plan")
     ap.add_argument("--fault-transient-prob", type=float, default=0.05,
                     help="per-dispatch transient failure probability")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="record spans and write a Chrome trace-event / "
+                         "Perfetto JSON timeline here (implies tracing=True)")
+    ap.add_argument("--metrics-out", metavar="PATH", default=None,
+                    help="sample the labeled metrics registry and write the "
+                         "JSON snapshot (with an embedded Prometheus text "
+                         "exposition) here (implies telemetry=True)")
     args = ap.parse_args()
 
     docs, _, topics = make_corpus(CorpusConfig(n_docs=8000, dim=48, n_topics=64))
@@ -86,7 +93,9 @@ def main() -> None:
                     num_ret_workers=args.ret_workers,
                     dispatch_policy=args.dispatch,
                     index_sharding=args.index_sharding,
-                    fault_plan=fault_plan)
+                    fault_plan=fault_plan,
+                    tracing=args.trace_out is not None,
+                    telemetry=args.metrics_out is not None)
     for i in range(args.n_requests):
         server.add_request(f"query {i}", workflows.build(args.workflow),
                            arrival_us=i * 20_000.0)
@@ -95,6 +104,13 @@ def main() -> None:
     print(f"served {m.finished} requests in {time.perf_counter()-t0:.2f}s wall")
     for k, v in m.summary().items():
         print(f"  {k:24s} {v}")
+    if args.trace_out:
+        server.export_trace(args.trace_out)
+        print(f"trace written to {args.trace_out} "
+              "(open in https://ui.perfetto.dev or chrome://tracing)")
+    if args.metrics_out:
+        server.metrics_snapshot(args.metrics_out)
+        print(f"metrics snapshot written to {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -192,6 +192,54 @@ class Server:
             return {}
         return self.sched.crossreq.report()
 
+    # -------------------------------------------------------- observability
+    def export_trace(self, path: Optional[str] = None) -> dict:
+        """Chrome trace-event / Perfetto JSON of the run so far (requires
+        ``tracing=True``).  Returns the trace object; with ``path`` also
+        writes it to disk (open in https://ui.perfetto.dev or
+        ``chrome://tracing``)."""
+        if self.sched.obs is None:
+            raise RuntimeError(
+                "tracing is off — construct the Server with tracing=True "
+                "(SchedulerConfig.tracing) to record spans")
+        trace = self.sched.obs.to_chrome()
+        if path:
+            with open(path, "w") as f:
+                json.dump(trace, f, indent=1)
+        return trace
+
+    def metrics_snapshot(self, path: Optional[str] = None) -> dict:
+        """Labeled-registry snapshot (requires ``telemetry=True``): the
+        structured samples plus the Prometheus text exposition under
+        ``"prometheus"`` and the virtual-clock sample timeline under
+        ``"timeline"``.  With ``path`` also writes the JSON to disk."""
+        tel = self.sched.telemetry
+        if tel is None:
+            raise RuntimeError(
+                "telemetry is off — construct the Server with telemetry=True "
+                "(SchedulerConfig.telemetry) to sample metrics")
+        snap = tel.snapshot()
+        snap["prometheus"] = tel.registry.render()
+        if path:
+            with open(path, "w") as f:
+                json.dump(snap, f, indent=1)
+        return snap
+
+    def attribution_report(self, *, check: bool = True,
+                           rel_tol: float = 1e-6) -> dict:
+        """Per-request latency attribution + run-level bottleneck report
+        (requires ``tracing=True``).  With ``check=True`` raises if any
+        finished request's components fail to sum to its measured latency
+        within ``rel_tol`` relative tolerance."""
+        if self.sched.obs is None:
+            raise RuntimeError(
+                "tracing is off — construct the Server with tracing=True "
+                "to enable latency attribution")
+        from repro.obs.attribution import attribution_report
+
+        return attribution_report(self.sched.obs, check=check,
+                                  rel_tol=rel_tol)
+
     # ------------------------------------------------------ worker lifecycle
     def register_worker(self) -> int:
         """Grow the pool mid-run: add a retrieval worker, returns its id."""

@@ -212,6 +212,13 @@ class RetrievalDispatcher:
         self.workers[wid].completed_us += dur_us
 
     # ----------------------------------------------------------------- stats
+    def utilization(self, now_us: float) -> list:
+        """Per-worker completed-busy fraction of the virtual timeline so far
+        (telemetry sampling; in [0, 1] since completed_us only accrues for
+        jobs whose end instant has passed)."""
+        t = max(float(now_us), 1e-9)
+        return [min(w.completed_us / t, 1.0) for w in self.workers]
+
     def report(self) -> dict:
         busy = np.asarray([w.busy_us for w in self.workers])
         return {

@@ -243,6 +243,14 @@ class WorkerRegistry:
         return min(cands) if cands else None
 
     # --------------------------------------------------------------- report
+    def state_counts(self) -> dict:
+        """Worker population per lifecycle state, every state present (zeros
+        included) so telemetry series keep a fixed label set."""
+        out = {s: 0 for s in STATES}
+        for w in self.workers.values():
+            out[w.state] += 1
+        return out
+
     def report(self) -> dict:
         by_state: dict[str, int] = {}
         for w in self.workers.values():

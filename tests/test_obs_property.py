@@ -1,0 +1,139 @@
+"""Property suite for the observability layer: over random chaos serving
+runs (random modes, worker counts, workflow mixes, FaultPlans) the span
+recorder must always produce a structurally valid Chrome trace that covers
+every journaled request, the latency attribution must partition each
+finished request's measured latency exactly, and turning tracing on must
+never perturb the run.  Plus a pure-function property: the priority sweep
+partitions any random interval soup over any window.
+
+Runs under hypothesis when installed (CI installs it explicitly); otherwise
+falls back to a fixed seeded sweep of the same properties so the suite never
+silently skips."""
+import numpy as np
+import pytest
+
+from repro import workflows
+from repro.core.backends import SimBackend
+from repro.obs.attribution import ATTRIBUTION_COMPONENTS, sweep
+from repro.obs.trace import request_ids_in_trace, validate_trace
+from repro.retrieval.ivf import ClusterCostModel
+from repro.server import Server
+from repro.serving.faults import FaultPlan
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # local envs without hypothesis: seeded sweep instead
+    HAVE_HYPOTHESIS = False
+
+RET_HEAVY = ClusterCostModel(fixed_us=150.0, per_vector_us=8.0,
+                             per_query_us=2.0)
+FALLBACK_SEEDS = list(range(24))
+NAMES = ["one-shot", "hyde", "irg", "multistep", "recomp",
+         "rerank", "multiquery", "hybrid", "compress", "pipeline"]
+MODES = ["hedra", "async", "sequential"]
+
+
+def _property(n_examples):
+    """Decorator: hypothesis-driven seeds when available, a fixed
+    parametrized sweep otherwise.  The wrapped test takes ``seed`` last."""
+    if HAVE_HYPOTHESIS:
+        return lambda fn: settings(
+            max_examples=n_examples, deadline=None,
+            suppress_health_check=[HealthCheck.too_slow],
+        )(given(seed=st.integers(0, 2**32 - 1))(fn))
+    return lambda fn: pytest.mark.parametrize(
+        "seed", FALLBACK_SEEDS[:n_examples])(fn)
+
+
+def _chaos_run(index, emb, seed, *, obs=True):
+    """One randomized chaos serve with the obs layer on.  Returns
+    (server, metrics, n_submitted)."""
+    rng = np.random.default_rng(seed)
+    nw = int(rng.integers(1, 5))
+    mode = MODES[int(rng.integers(0, len(MODES)))]
+    sharding = bool(rng.integers(0, 2)) and nw > 1
+    n = int(rng.integers(4, 9))
+    plan = FaultPlan.random(
+        int(rng.integers(0, 2**31)), nw, 1_200_000.0,
+        crash_frac=float(rng.uniform(0.0, 0.5)),
+        stall_rate=float(rng.uniform(0.0, 1.0)),
+        stall_factor=float(rng.uniform(2.0, 10.0)),
+        transient_prob=float(rng.uniform(0.0, 0.3)))
+    be = SimBackend(index, emb, cost_model=RET_HEAVY, seed=0,
+                    fault_plan=plan)
+    s = Server(index, emb, mode=mode, backend=be, nprobe=12, topk=5,
+               num_ret_workers=nw, index_sharding=sharding,
+               retry_backoff_us=float(rng.uniform(2_000.0, 40_000.0)),
+               retry_budget=int(rng.integers(1, 4)),
+               hedge_suspect=bool(rng.integers(0, 2)),
+               tracing=obs, telemetry=obs)
+    for i in range(n):
+        s.add_request(f"q{i}", workflows.build(
+            NAMES[int(rng.integers(0, len(NAMES)))]),
+            arrival_us=float(rng.uniform(0.0, 60_000.0) + i * 2_000.0))
+    m = s.run()
+    return s, m, n
+
+
+@_property(14)
+def test_chaos_trace_valid_and_attribution_partitions(small_index, embedder,
+                                                      seed):
+    """Under arbitrary crashes/stalls/transients the exported trace stays
+    structurally valid, every journaled request appears in it, and the
+    attribution components sum to each measured latency within 1e-6."""
+    s, m, n = _chaos_run(small_index, embedder, seed)
+    trace = s.export_trace()
+    assert validate_trace(trace) == []
+    journal = {r.request_id for r in s.sched.done}
+    assert journal <= request_ids_in_trace(trace)
+    rep = s.attribution_report(rel_tol=1e-6)  # raises on any violation
+    assert rep["finished"] == m.finished
+    assert rep["max_rel_residual"] <= 1e-6
+    for row in rep["per_request"]:
+        assert all(v >= -1e-9 for v in row["components_us"].values())
+    # sampler saw the run too: monotone virtual timestamps, consistent
+    # lifecycle head-counts
+    tel = s.sched.telemetry
+    ts = [row["t_us"] for row in tel.samples]
+    assert ts == sorted(ts)
+    for row in tel.samples:
+        assert sum(row["lifecycle"].values()) == s.sched.num_ret_workers
+
+
+@_property(6)
+def test_obs_on_never_perturbs_chaos_run(small_index, embedder, seed):
+    """Passivity under chaos: the same seed with the obs layer off yields
+    bit-identical per-request event traces — recording draws no randomness
+    and mutates no scheduler state, faults included."""
+    fps = []
+    for obs in (True, False):
+        s, m, _ = _chaos_run(small_index, embedder, seed, obs=obs)
+        fps.append({r.request_id:
+                    [(float(t), e, repr(p)) for t, e, p in r.events]
+                    for r in s.sched.done})
+    assert fps[0] == fps[1]
+
+
+@_property(20)
+def test_sweep_partitions_any_interval_soup(seed):
+    """Pure-function property: for random overlapping intervals and a random
+    window, the priority sweep's components are non-negative and sum to the
+    window width exactly (uncovered time charged to queueing)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(0, 12))
+    comps = [c for c in ATTRIBUTION_COMPONENTS if c != "queueing"]
+    rows = []
+    for _ in range(n):
+        s0 = float(rng.uniform(-50.0, 150.0))
+        rows.append([s0, s0 + float(rng.uniform(0.0, 80.0)),
+                     comps[int(rng.integers(0, len(comps)))]])
+    start = float(rng.uniform(-20.0, 60.0))
+    end = start + float(rng.uniform(0.0, 120.0))
+    out = sweep(rows, start, end)
+    assert set(out) == set(ATTRIBUTION_COMPONENTS)
+    assert all(v >= 0.0 for v in out.values())
+    np.testing.assert_allclose(sum(out.values()), end - start,
+                               rtol=1e-9, atol=1e-9)
