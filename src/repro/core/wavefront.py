@@ -29,6 +29,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core import stages
+from repro.core.ownership import handoff, owned_by
 from repro.core.runtime import RequestContext, RuntimeDAG
 from repro.core.similarity import LocalCache
 from repro.core.speculation import SpeculationPolicy, Speculator
@@ -415,6 +416,8 @@ class _FaultState:
     orphan_parts: list = dataclasses.field(default_factory=list)
 
 
+@owned_by("scheduler", expose=("metrics", "crossreq", "obs", "telemetry",
+                               "lifecycle", "shard_map"))
 class WavefrontScheduler:
     def __init__(self, backend, index, config: SchedulerConfig,
                  workload=None):
@@ -525,6 +528,7 @@ class WavefrontScheduler:
         """Queued (not yet admitted-to-active) requests in arrival order."""
         return [item[2] for item in sorted(self._pending, key=lambda x: x[:2])]
 
+    @handoff("server")
     def add_request(self, req: RequestContext) -> bool:
         """Queue a request for admission at its arrival time.  Returns False
         when the admission layer sheds it (bounded queue / infeasible
@@ -553,6 +557,7 @@ class WavefrontScheduler:
         return True
 
     # ------------------------------------------------- worker pool lifecycle
+    @handoff("server")
     def register_worker(self) -> int:
         """Add a fresh retrieval worker to the pool mid-run.  The new worker
         starts HEALTHY and owns no shard — in shard mode it serves stage
@@ -566,11 +571,13 @@ class WavefrontScheduler:
         self.dispatcher.add_worker()
         return wid
 
+    @handoff("server")
     def drain_worker(self, wid: int) -> bool:
         """Operator-initiated leave: the worker finishes its in-flight job
         and takes no new work until ``rebind_worker``."""
         return self.lifecycle.drain(int(wid), self.now)
 
+    @handoff("server")
     def rebind_worker(self, wid: int) -> bool:
         """Return a drained worker to the pool (JOINING -> HEALTHY)."""
         return self.lifecycle.rebind(int(wid), self.now)
@@ -1920,6 +1927,7 @@ class WavefrontScheduler:
             self._ret_jobs[wid] = None
         return "advanced"
 
+    @handoff("server")
     def run(self, max_time_us: float = 4e9) -> Metrics:
         """Run to completion (or the time cutoff) from the current clock.
         On a fresh scheduler with every request pre-loaded this is the
@@ -1935,6 +1943,7 @@ class WavefrontScheduler:
                 break
         return self._finalize_metrics()
 
+    @handoff("server")
     def step(self, until_us: float) -> Metrics:
         """Incremental streaming core: advance the event clock to
         ``until_us``, processing every completion/arrival due by then, and
@@ -1972,6 +1981,7 @@ class WavefrontScheduler:
         self.metrics.sim_time_us = self.now
         return self.metrics
 
+    @handoff("server")
     def drain(self, max_time_us: float = 4e9) -> Metrics:
         """Finish all admitted/in-flight work (streaming shutdown)."""
         return self.run(max_time_us=max_time_us)

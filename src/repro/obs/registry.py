@@ -27,6 +27,8 @@ from __future__ import annotations
 
 from typing import Optional
 
+from repro.core.ownership import handoff, owned_by
+
 SNAPSHOT_SCHEMA_VERSION = 1
 
 # log-spaced latency buckets in virtual microseconds: 1 ms .. 10 s
@@ -276,6 +278,7 @@ def slo_class_of(slo_us) -> str:
     return f"{int(float(slo_us))}us"
 
 
+@owned_by("obs")
 class TelemetrySampler:
     """Virtual-clock sampler driven from the scheduler cycle.
 
@@ -334,6 +337,7 @@ class TelemetrySampler:
             labelnames=("name",))
 
     # ----------------------------------------------------------- event hooks
+    @handoff("scheduler")
     def on_finish(self, req, now: float) -> None:
         wf = req.graph.name
         sc = slo_class_of(req.slo_us)
@@ -341,9 +345,11 @@ class TelemetrySampler:
         self.m_latency.observe(float(now) - float(req.arrival_us),
                                workflow=wf, slo_class=sc)
 
+    @handoff("scheduler")
     def on_shed(self, req, reason: str) -> None:
         self.m_shed.inc(reason=str(reason))
 
+    @handoff("scheduler")
     def on_ret_job(self, job, wid: int) -> None:
         kinds: dict[str, int] = {}
         plan = job.get("plan")
@@ -355,10 +361,12 @@ class TelemetrySampler:
         for kind, n in kinds.items():
             self.m_ret_jobs.inc(n, worker=str(int(wid)), stage_kind=kind)
 
+    @handoff("scheduler")
     def on_gen_job(self, job) -> None:
         self.m_gen_jobs.inc()
 
     # ------------------------------------------------------------- sampling
+    @handoff("scheduler")
     def maybe_sample(self, sched, now: float) -> None:
         if now < self._next_sample_us:
             return
@@ -391,6 +399,7 @@ class TelemetrySampler:
             "lifecycle": states,
         })
 
+    @handoff("scheduler")
     def finalize(self, sched, now: float) -> None:
         """End-of-run fold: one last sample plus the ``Metrics`` dataclass
         scalar counters projected into ``repro_scheduler_counter``."""

@@ -33,6 +33,8 @@ import dataclasses
 import json
 from typing import Optional
 
+from repro.core.ownership import handoff, owned_by
+
 # track keys ---------------------------------------------------------------
 QUEUE_TRACK = ("queue",)
 GEN_TRACK = ("gen",)
@@ -83,6 +85,7 @@ class _ReqTrace:
     gap: Optional[tuple] = None  # (start_us, component) open wait gap
 
 
+@owned_by("obs")
 class TraceRecorder:
     def __init__(self):
         self.spans: list[dict] = []
@@ -90,6 +93,11 @@ class TraceRecorder:
         self.flows: list[dict] = []
         self.requests: dict[int, _ReqTrace] = {}
         self._gather_parts: dict[int, list] = {}  # id(gather) -> flow points
+        # id(job) -> (span, attribution rows): recorder-owned side tables —
+        # stashing these on the scheduler's job dicts would make the
+        # recorder a writer of scheduler state (hooks/obs-mutation)
+        self._job_spans: dict[int, dict] = {}
+        self._job_rows: dict[int, list] = {}
         self._next_flow = 0
 
     # ------------------------------------------------------------ low level
@@ -153,18 +161,21 @@ class TraceRecorder:
         return row
 
     # ----------------------------------------------------- scheduler hooks
+    @handoff("scheduler")
     def request_submitted(self, req, now: float) -> None:
         e = self._req(req)
         self._instant(QUEUE_TRACK, f"arrive r{e.rid}", e.arrival_us,
                       "request", {"request": e.rid, "workflow": e.workflow,
                                   "slo_us": e.slo_us})
 
+    @handoff("scheduler")
     def request_shed(self, req, now: float, reason: str) -> None:
         self._instant(QUEUE_TRACK, f"shed r{req.request_id}",
                       float(max(now, req.arrival_us)), "shed",
                       {"request": req.request_id, "reason": reason,
                        "workflow": req.graph.name})
 
+    @handoff("scheduler")
     def request_finished(self, req, now: float) -> None:
         e = self._req(req)
         if e.gap is not None:
@@ -179,6 +190,7 @@ class TraceRecorder:
                        "latency_us": float(now) - e.arrival_us,
                        "degraded": e.degraded})
 
+    @handoff("scheduler")
     def gen_job(self, job, now: float) -> None:
         reqs = job["reqs"]
         rids = [r.request_id for r in reqs]
@@ -186,13 +198,14 @@ class TraceRecorder:
             GEN_TRACK, f"gen b{len(reqs)} s{job['n_steps']}", now,
             job["end"] - now, "gen",
             {"requests": rids, "n_steps": int(job["n_steps"])})
-        job["_obs_span"] = span
+        self._job_spans[id(job)] = span
         rows = []
         for r in reqs:
             rows.append(self._attach(r, GEN_TRACK, now, job["end"],
                                      "generation_compute"))
-        job["_obs_rows"] = rows
+        self._job_rows[id(job)] = rows
 
+    @handoff("scheduler")
     def ret_job(self, job, wid: int, now: float, hedge: bool) -> None:
         track = ret_track(wid)
         end = float(job["end"])
@@ -236,28 +249,31 @@ class TraceRecorder:
                           "hedge" if hedge else "ret",
                           {"requests": sorted(set(rids)), "worker": int(wid),
                            "hedge": bool(hedge)})
-        job["_obs_span"] = span
-        job["_obs_rows"] = rows
+        self._job_spans[id(job)] = span
+        self._job_rows[id(job)] = rows
 
+    @handoff("scheduler")
     def ret_job_lost(self, job, now: float) -> None:
         """The worker died mid-job: its results are fenced, so the time the
         involved requests spent on it was recovery, not service."""
-        span = job.get("_obs_span")
+        span = self._job_spans.get(id(job))
         if span is not None:
             span["args"] = dict(span["args"], lost=True)
             span["name"] = f"lost {span['name']}"
             span["cat"] = "lost"
-        for row in job.get("_obs_rows", ()):
+        for row in self._job_rows.get(id(job), ()):
             row[2] = "fault_recovery"
 
+    @handoff("scheduler")
     def hedge_link(self, job, hjob, now: float) -> None:
-        src = job.get("_obs_span")
-        dst = hjob.get("_obs_span")
+        src = self._job_spans.get(id(job))
+        dst = self._job_spans.get(id(hjob))
         if src is None or dst is None:
             return
         self._flow("hedge", (src["track"], dst["ts"]),
                    (dst["track"], dst["ts"]), name="hedge")
 
+    @handoff("scheduler")
     def gather_merge(self, gather, now: float) -> None:
         rid = gather.req.request_id
         parts = self._gather_parts.pop(id(gather), [])
@@ -270,6 +286,7 @@ class TraceRecorder:
         if e is not None:
             e.intervals.append([float(now), float(now), "merge"])
 
+    @handoff("scheduler")
     def fanout(self, leader, sub, now: float, kind: str) -> None:
         e = self._req(leader)
         src = e.frontier or (QUEUE_TRACK, float(now))
@@ -279,6 +296,7 @@ class TraceRecorder:
         self._flow("fusion", src, (QUEUE_TRACK, float(now)),
                    name=f"r{leader.request_id}->r{sub.request_id}")
 
+    @handoff("scheduler")
     def open_gap(self, req, now: float, component: str) -> None:
         """Start a wait gap (``retry_hedge_failover`` backoff or
         ``fault_recovery`` after a worker death); closed by the request's
@@ -289,15 +307,18 @@ class TraceRecorder:
         if e.gap is None:
             e.gap = (float(now), component)
 
+    @handoff("scheduler")
     def failover(self, req, wid: int, now: float) -> None:
         self._instant(QUEUE_TRACK, f"failover r{req.request_id}->w{wid}",
                       now, "failover",
                       {"request": req.request_id, "worker": int(wid)})
 
+    @handoff("scheduler")
     def degraded(self, req, now: float) -> None:
         self._instant(QUEUE_TRACK, f"degraded r{req.request_id}", now,
                       "degraded", {"request": req.request_id})
 
+    @handoff("scheduler")
     def worker_transition(self, wid: int, old: str, new: str,
                           now: float) -> None:
         self._instant(ret_track(wid), f"w{wid} {old}->{new}", now,

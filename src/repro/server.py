@@ -45,6 +45,7 @@ import os
 from typing import Iterable, Optional, Union
 
 from repro.core.backends import SimBackend
+from repro.core.ownership import owned_by
 from repro.core.ragraph import RAGraph
 from repro.core.runtime import RequestContext
 from repro.core.wavefront import Metrics, SchedulerConfig, WavefrontScheduler
@@ -61,6 +62,7 @@ def _json_safe(payload):
     return repr(payload)
 
 
+@owned_by("server")
 class Server:
     def __init__(
         self,

@@ -41,6 +41,8 @@ from typing import Iterable, Optional, Sequence
 
 import numpy as np
 
+from repro.core.ownership import owned_by
+
 DISPATCH_POLICIES = ("affinity", "least_loaded", "round_robin")
 
 
@@ -57,6 +59,7 @@ class WorkerState:
     dispatches: int = 0
 
 
+@owned_by("scheduler")
 class RetrievalDispatcher:
     """Assigns retrieval sub-stages (cluster lists) to a pool of workers."""
 
@@ -314,6 +317,7 @@ class AdmissionDecision:
     slack_us: float = float("inf")
 
 
+@owned_by("scheduler")
 class AdmissionController:
     """Admission policy for the streaming front-end.
 

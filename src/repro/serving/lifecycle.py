@@ -37,6 +37,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.core.ownership import owned_by
+
 JOINING = "joining"
 HEALTHY = "healthy"
 SUSPECT = "suspect"
@@ -56,6 +58,7 @@ class WorkerHealth:
     timeline: list = dataclasses.field(default_factory=list)
 
 
+@owned_by("scheduler")
 class WorkerRegistry:
     """Health states for the retrieval-worker pool, driven by virtual-clock
     heartbeats.  The registry is always built (drain/rebind are operational
@@ -186,9 +189,12 @@ class WorkerRegistry:
 
     def tick(self, now: float, plan=None) -> list:
         """Fold heartbeat state at ``now`` into transitions.  Returns
-        ``[(wid, old_state, new_state), ...]`` for every change."""
+        ``[(wid, old_state, new_state), ...]`` for every change.  The list
+        is canonically wid-ordered — the scheduler's recovery path and the
+        obs transition hooks consume it in order, so the order must come
+        from the worker ids, not from registration history."""
         out = []
-        for w in self.workers.values():
+        for w in sorted(self.workers.values(), key=lambda x: x.wid):
             if w.state == DEAD:
                 continue  # terminal
             hb = self._last_heartbeat(w, now, plan)

@@ -1,0 +1,8 @@
+"""Planted: determinism/wall-clock — one positive, one suppressed."""
+import time
+
+
+def measure():
+    t0 = time.time()  # PLANTED: wall-clock in the virtual-clock zone
+    t1 = time.perf_counter()  # repro-lint: disable=wall-clock -- sanctioned
+    return t0, t1

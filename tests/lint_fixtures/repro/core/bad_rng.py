@@ -1,0 +1,13 @@
+"""Planted: determinism/unseeded-rng — global-state draw and an
+entropy-seeded constructor; seeded constructors stay legal."""
+import random
+
+import numpy as np
+
+
+def draw():
+    x = random.random()  # PLANTED: module-level global RNG
+    rng = np.random.default_rng()  # PLANTED: entropy-seeded constructor
+    good = np.random.default_rng(0)
+    also_good = random.Random(1234)
+    return x, rng, good, also_good

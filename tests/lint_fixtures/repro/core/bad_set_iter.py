@@ -1,0 +1,19 @@
+"""Planted: determinism/set-iteration — a set loop feeding a heap push, a
+dict-view loop feeding dispatch selection, and a hash-order comprehension;
+sorted() wrapping and order-insensitive set folds stay legal."""
+import heapq
+
+
+def schedule(ids, workers, dispatcher, heap):
+    pending = set(ids)
+    for rid in pending:  # PLANTED: set iteration into an ordering sink
+        heapq.heappush(heap, rid)
+    for w in workers.values():  # PLANTED: dict view into dispatch selection
+        dispatcher.pick_worker(w)
+    exposed = [rid for rid in pending]  # PLANTED: hash order escapes
+    seen = set()
+    for rid in pending:  # ok: order-insensitive fold
+        seen.add(rid)
+    for rid in sorted(pending):  # ok: sanitized
+        heapq.heappush(heap, rid)
+    return exposed, seen

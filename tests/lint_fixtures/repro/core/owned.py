@@ -1,0 +1,40 @@
+"""Planted: ownership/cross-domain-write and ownership/cross-domain-call —
+server-domain code reaching past its scheduler handle; declared handoffs,
+exposed read surfaces, and plain reads stay legal."""
+from repro.core.ownership import handoff, owned_by
+
+
+class Metrics:
+    def report(self):
+        return {}
+
+
+@owned_by("scheduler", expose=("metrics",))
+class Sched:
+    def __init__(self):
+        self.now = 0.0
+        self.metrics = Metrics()
+
+    @handoff("server")
+    def add_request(self, req):
+        return True
+
+    def internal_step(self):
+        return self.now
+
+
+@owned_by("server")
+class Front:
+    def __init__(self):
+        self.sched = Sched()
+
+    def bad_write(self):
+        self.sched.now = 5.0  # PLANTED: write past the handle
+
+    def bad_call(self):
+        return self.sched.internal_step()  # PLANTED: not a handoff
+
+    def fine(self, req):
+        self.sched.add_request(req)  # ok: declared @handoff("server")
+        snap = self.sched.metrics.report()  # ok: exposed read surface
+        return snap, self.sched.now  # ok: plain read

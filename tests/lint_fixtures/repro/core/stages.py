@@ -1,0 +1,10 @@
+"""Negative: the registry file itself is exempt from registry/kind-branch
+— per-kind behaviour lives here by design."""
+
+
+def spec_for(node):
+    if node.kind == "generation":  # exempt file: not a finding
+        return "gen"
+    if node.kind in ("retrieval", "rerank"):  # exempt file: not a finding
+        return "ret"
+    return "other"

@@ -1,0 +1,15 @@
+"""Planted: hooks/unguarded-hook — a hook call outside its knob guard;
+`if`-guarded and short-circuit-guarded calls stay legal."""
+
+
+class Scheduler:
+    def __init__(self, tracing):
+        self.obs = object() if tracing else None
+        self.telemetry = None
+
+    def finish(self, req, now):
+        self.obs.request_finished(req, now)  # PLANTED: no knob guard
+        if self.obs is not None:
+            self.obs.request_submitted(req, now)  # ok: guarded
+        self.telemetry is not None and self.telemetry.maybe_sample(
+            self, now)  # ok: short-circuit guard

@@ -1,0 +1,17 @@
+"""Planted: hooks/obs-mutation — a hook writing into a passed-in job dict,
+mutating scheduler state, and mutating through a local alias; reads and
+recorder-owned state stay legal."""
+
+
+class Recorder:
+    def __init__(self):
+        self.rows = []
+
+    def on_job(self, job, sched):
+        job["_obs_span"] = 1  # PLANTED: write into a passed-in object
+        sched.active.append(job)  # PLANTED: mutator on scheduler state
+        q = sched.dispatcher
+        q.submit(job)  # PLANTED: mutator through a param alias
+        depth = len(sched.active)  # ok: read
+        self.rows.append(depth)  # ok: recorder-owned state
+        return depth

@@ -1,0 +1,17 @@
+"""Planted: registry/kind-branch — direct comparison, aliased membership
+test, and a match statement; registry dispatch stays legal."""
+from repro.core import stages
+
+
+def route(node):
+    if node.kind == "generation":  # PLANTED: kind comparison
+        return 1
+    k = node.kind
+    if k in ("retrieval", "rerank"):  # PLANTED: aliased membership test
+        return 2
+    match node.kind:
+        case "rewrite":  # PLANTED: match on a stage kind
+            return 3
+        case _:
+            pass
+    return stages.spec(node.kind)  # ok: registry dispatch

@@ -1,0 +1,6 @@
+"""Negative: outside the virtual-clock zone the wall clock is legal."""
+import time
+
+
+def stamp():
+    return time.time()  # not in repro/core|serving|crossreq|obs: allowed

@@ -1,0 +1,116 @@
+"""Property suite for repro-lint: the report is a pure function of file
+*contents* — invariant under scan-order permutation — and inline
+suppressions round-trip (suppressing exactly one finding's line removes
+exactly that line's findings for that rule and nothing else).
+
+Runs under hypothesis when it is installed (CI installs it explicitly);
+otherwise falls back to a fixed seeded sweep of the same properties so the
+suite never silently skips."""
+import json
+import os
+import shutil
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.analysis.lint import run_lint
+from repro.analysis.lint.framework import iter_py_files
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # local envs without hypothesis: seeded sweep instead
+    HAVE_HYPOTHESIS = False
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIXTURES = os.path.join(HERE, "lint_fixtures")
+FALLBACK_SEEDS = list(range(24))
+
+
+def _property(n_examples):
+    """Decorator: hypothesis-driven seeds when available, a fixed
+    parametrized sweep otherwise.  The wrapped test takes ``seed`` last."""
+    if HAVE_HYPOTHESIS:
+        return lambda fn: settings(
+            max_examples=n_examples, deadline=None,
+            suppress_health_check=[HealthCheck.too_slow],
+        )(given(seed=st.integers(0, 2**32 - 1))(fn))
+    return lambda fn: pytest.mark.parametrize(
+        "seed", FALLBACK_SEEDS[:n_examples])(fn)
+
+
+def _fixture_files():
+    return list(iter_py_files([os.path.join(FIXTURES, "repro")]))
+
+
+# ---------------------------------------------------------------------------
+# Scan-order invariance: the report depends on contents, not traversal
+# ---------------------------------------------------------------------------
+
+
+@_property(30)
+def test_report_invariant_under_file_reordering(seed):
+    rng = np.random.default_rng(seed)
+    files = _fixture_files()
+    baseline = run_lint(files, root=FIXTURES).to_json()
+    shuffled = [files[i] for i in rng.permutation(len(files))]
+    assert run_lint(shuffled, root=FIXTURES).to_json() == baseline
+
+
+@_property(12)
+def test_report_invariant_under_duplicate_paths(seed):
+    rng = np.random.default_rng(seed)
+    files = _fixture_files()
+    baseline = run_lint(files, root=FIXTURES).to_json()
+    dup = files + [files[int(rng.integers(len(files)))]]
+    shuffled = [dup[i] for i in rng.permutation(len(dup))]
+    assert run_lint(shuffled, root=FIXTURES).to_json() == baseline
+
+
+# ---------------------------------------------------------------------------
+# Suppression round-trip: disabling one finding removes exactly it
+# ---------------------------------------------------------------------------
+
+
+def _key(f):
+    return (f.path, f.line, f.rule)
+
+
+@_property(30)
+def test_suppression_removes_exactly_the_chosen_finding(seed):
+    rng = np.random.default_rng(seed)
+    base = run_lint(_fixture_files(), root=FIXTURES)
+    assert base.findings
+    chosen = base.findings[int(rng.integers(len(base.findings)))]
+    with tempfile.TemporaryDirectory() as tmp:
+        root = os.path.join(tmp, "scan")
+        shutil.copytree(FIXTURES, root)
+        target = os.path.join(root, chosen.path)
+        lines = open(target, encoding="utf-8").read().splitlines(True)
+        idx = chosen.line - 1
+        eol = "\n" if lines[idx].endswith("\n") else ""
+        lines[idx] = (lines[idx].rstrip("\n")
+                      + f"  # repro-lint: disable={chosen.short_rule}" + eol)
+        with open(target, "w", encoding="utf-8") as fh:
+            fh.writelines(lines)
+        after = run_lint([os.path.join(root, "repro")], root=root)
+    # exactly the chosen line's findings for that rule moved to suppressed
+    removed = {_key(f) for f in base.findings} - {_key(f)
+                                                  for f in after.findings}
+    assert removed == {_key(chosen)}
+    assert _key(chosen) in {_key(f) for f in after.suppressed}
+
+
+@_property(12)
+def test_suppression_report_is_json_round_trip_stable(seed):
+    rng = np.random.default_rng(seed)
+    files = _fixture_files()
+    shuffled = [files[i] for i in rng.permutation(len(files))]
+    report = run_lint(shuffled, root=FIXTURES)
+    d = json.loads(report.to_json())
+    assert d == report.to_dict()
+    assert d["summary"]["total"] == len(report.findings)
+    assert d["summary"]["suppressed"] == len(report.suppressed)
