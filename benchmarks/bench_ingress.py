@@ -1,0 +1,163 @@
+"""Closed-loop wall-clock serving: ingress overhead, client scaling, and
+the replay-oracle check.
+
+The serving-front-end sweep for the ingress PR: real producer threads
+(closed-loop clients / an open-loop stream replayer / the heartbeat pump)
+drive the scheduler through ``serving/ingress.py`` at a wall->virtual
+speedup, and every point's recorded arrival trace is replayed on the pure
+virtual clock — the bit-identity of the per-request event fingerprints is
+asserted inline, so completing the sweep *is* the determinism check.
+Reported per point:
+
+* client-scaling: virtual-time goodput and p95 latency as the closed-loop
+  population grows (offered load adapts to service rate — the knee shows
+  as think-time stops hiding service time);
+* token budget: arrivals admitted before the shared budget binds;
+* ingress overhead: wall seconds burned per virtual second served, plus
+  trace-row volume (arrival/heartbeat/tick mix) — the cost of running the
+  threaded front-end instead of the batch path;
+* replay: wall seconds to re-run the trace through the oracle.
+
+Standalone: ``python benchmarks/bench_ingress.py --quick [--json out.json]``
+(the CI smoke job); also runs via ``benchmarks/run.py --only ingress``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from benchmarks.common import emit, fixture, make_server  # noqa: E402
+from repro.serving.ingress import replay_trace  # noqa: E402
+from repro.serving.workload import MIXES, ClosedLoopSpec  # noqa: E402
+
+SPEEDUP = 800.0
+MIX = "heterogeneous"
+
+
+def _point(index, embedder, **kw):
+    mix = MIXES[MIX]
+    return make_server(index, embedder, "hedra", workload=mix.profile(),
+                       num_ret_workers=2, **kw)
+
+
+def _replay_check(mk, server, trace) -> float:
+    """Replay the trace on a fresh server; assert bit-identity.  Returns
+    replay wall seconds."""
+    replica = mk()
+    t0 = time.perf_counter()
+    replay_trace(replica, trace)
+    dt = time.perf_counter() - t0
+    assert replica.fingerprints() == server.fingerprints(), \
+        "ingress replay diverged from the wall-clock run"
+    return dt
+
+
+def _stats(m):
+    lat = np.asarray(m.latencies_us, np.float64)
+    p95 = float(np.percentile(lat, 95)) / 1e3 if lat.size else 0.0
+    end_us = m.finish_log[-1][0] if m.finish_log else 1.0
+    return p95, m.finished / max(end_us / 1e6, 1e-9)
+
+
+def run(quick: bool = True) -> None:
+    index, embedder = fixture()
+    mix = MIXES[MIX]
+    per_client = 4 if quick else 10
+    populations = [1, 4] if quick else [1, 2, 4, 8]
+
+    # ---- client scaling: closed-loop goodput/latency vs population
+    for nc in populations:
+        spec = ClosedLoopSpec.from_mix(mix, num_clients=nc,
+                                       requests_per_client=per_client,
+                                       think_time_s=0.02)
+
+        def mk():
+            return _point(index, embedder)
+
+        s = mk()
+        t0 = time.perf_counter()
+        m, trace = s.serve_wallclock(closed_loop=spec, speedup=SPEEDUP,
+                                     max_wall_s=120.0)
+        wall_s = time.perf_counter() - t0
+        replay_s = _replay_check(mk, s, trace)
+        p95_ms, goodput = _stats(m)
+        virt_s = s.sched.now / 1e6
+        emit(f"ingress_closed_c{nc}", wall_s * 1e6,
+             f"finished={m.finished}"
+             f"_goodput_rps={goodput:.2f}"
+             f"_p95_ms={p95_ms:.1f}"
+             f"_rows={len(trace.rows)}"
+             f"_wall_per_virt={wall_s / max(virt_s, 1e-9):.3f}"
+             f"_replay_s={replay_s:.3f}")
+
+    # ---- token budget: the shared budget bounds the run
+    spec = ClosedLoopSpec.from_mix(mix, num_clients=4,
+                                   requests_per_client=4 * per_client,
+                                   think_time_s=0.01,
+                                   token_budget=per_client * 600)
+
+    def mk_budget():
+        return _point(index, embedder)
+
+    s = mk_budget()
+    m, trace = s.serve_wallclock(closed_loop=spec, speedup=SPEEDUP,
+                                 max_wall_s=120.0)
+    _replay_check(mk_budget, s, trace)
+    arrivals = sum(1 for r in trace.rows if r.kind == "arrival")
+    emit("ingress_token_budget", arrivals,
+         f"arrivals={arrivals}"
+         f"_of={4 * 4 * per_client}"
+         f"_budget={spec.token_budget}"
+         f"_finished={m.finished}")
+
+    # ---- open-loop ingress overhead vs the pure virtual serve
+    n = 3 * per_client
+    stream = mix.sample(n, rate_per_s=120.0, seed=19)
+
+    def mk_open():
+        return _point(index, embedder, external_heartbeats=True,
+                      fault_tolerance=True, max_pending=8,
+                      admission_control=True)
+
+    s = mk_open()
+    t0 = time.perf_counter()
+    m, trace = s.serve_wallclock(stream, speedup=SPEEDUP, max_wall_s=120.0)
+    wall_s = time.perf_counter() - t0
+    replay_s = _replay_check(mk_open, s, trace)
+    kinds = {k: sum(1 for r in trace.rows if r.kind == k)
+             for k in ("arrival", "heartbeat", "readmit", "tick")}
+    virt_s = s.sched.now / 1e6
+    emit("ingress_open_loop", wall_s * 1e6,
+         f"finished={m.finished}"
+         f"_shed_final={m.shed_final}"
+         f"_readmitted={m.shed_readmitted}"
+         f"_hb_rows={kinds['heartbeat']}"
+         f"_readmit_rows={kinds['readmit']}"
+         f"_wall_per_virt={wall_s / max(virt_s, 1e-9):.3f}"
+         f"_replay_s={replay_s:.3f}")
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="",
+                    help="write the emitted rows as a JSON record")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=args.quick)
+    if args.json:
+        from benchmarks import common
+
+        with open(args.json, "w") as f:
+            json.dump({"rows": common.RESULTS}, f, indent=1)
+        print(f"# wrote {args.json} ({len(common.RESULTS)} rows)",
+              file=sys.stderr)

@@ -25,6 +25,7 @@ MODULES = [
     ("serving", "benchmarks.bench_serving"),          # streaming goodput sweep
     ("sharded_serving", "benchmarks.bench_sharded_serving"),  # shard-mode scatter-gather
     ("faults", "benchmarks.bench_faults"),            # goodput under injected faults
+    ("ingress", "benchmarks.bench_ingress"),          # wall-clock closed-loop + replay oracle
     ("obs", "benchmarks.bench_obs"),                  # tracing overhead + attribution
     ("plan", "benchmarks.bench_plan"),                # SoA sub-stage executor
     ("crossreq", "benchmarks.bench_crossreq"),        # cross-request layer

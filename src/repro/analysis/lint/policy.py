@@ -30,6 +30,12 @@ class Policy:
     # packages where only the virtual clock may be read
     virtual_clock_paths: tuple = (
         "repro/core/", "repro/serving/", "repro/crossreq/", "repro/obs/")
+    # the one carve-out inside those packages: the wall-clock ingress
+    # boundary (serving/ingress.py) exists to *read* real time — producer
+    # threads stamp arrivals/heartbeats there and everything downstream
+    # consumes the recorded stamps.  Nothing else in the serving packages
+    # may join this list; obs taps receive wall values as arguments.
+    wallclock_ingress_paths: tuple = ("repro/serving/ingress.py",)
     wallclock_calls: frozenset = frozenset({
         "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
         "time.perf_counter", "time.perf_counter_ns", "time.process_time",
@@ -97,6 +103,8 @@ class Policy:
     })
 
     def in_virtual_clock_zone(self, relpath: str) -> bool:
+        if _match(relpath, self.wallclock_ingress_paths):
+            return False
         return _match(relpath, self.virtual_clock_paths)
 
     def in_set_iter_zone(self, relpath: str) -> bool:

@@ -101,6 +101,10 @@ class RequestContext:
     state: dict  # workflow variables ({"input": ..., outputs of nodes, ...})
     arrival_us: float = 0.0
     slo_us: float = 0.0  # per-request latency SLO; 0 -> scheduler default
+    # monotonic admission sequence (scheduler-assigned): breaks pending-heap
+    # ties at equal arrival stamps in submission order, so concurrent
+    # wall-clock submits replay exactly as they ran
+    ingress_seq: Optional[int] = None
     current: Optional[int] = None  # active node id; None before START/after END
     finished: bool = False
     finish_us: float = -1.0

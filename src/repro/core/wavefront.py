@@ -116,6 +116,12 @@ class SchedulerConfig:
     # failover_whole_index lets orphaned shard parts run on any serving
     # worker when no replica covers them (off: such parts degrade).
     fault_tolerance: bool = False
+    # wall-clock serving (serving/ingress.py): heartbeats arrive as ingress
+    # rows (Server.heartbeat_worker) instead of the always-fresh virtual
+    # model, so real heartbeat gaps drive SUSPECT/DEAD detection.  Off by
+    # default — with it off (and no FaultPlan) nothing ever transitions and
+    # the loop is bit-identical to the heartbeat-unaware path.
+    external_heartbeats: bool = False
     heartbeat_interval_us: float = 50_000.0
     suspect_after_us: float = 150_000.0
     dead_after_us: float = 400_000.0
@@ -158,7 +164,7 @@ class SchedulerConfig:
 
 # version of the summary()/window_summary() dict schema (bumped when keys
 # are added/renamed/removed); documented in benchmarks/README.md
-SUMMARY_SCHEMA_VERSION = 2
+SUMMARY_SCHEMA_VERSION = 3
 
 
 def _lat_ms(lat: "np.ndarray", q=None) -> float:
@@ -205,6 +211,15 @@ class Metrics:
     submitted: int = 0
     shed_queue_full: int = 0
     shed_infeasible: int = 0
+    # ingress re-admission accounting (serving/ingress.py closed loop): a
+    # logical request's *first* shed bumps shed_*; every later attempt bumps
+    # resubmissions only, and the attempt that finally lands bumps
+    # shed_readmitted — so shed_final (= shed - shed_readmitted) counts
+    # requests that actually left the system and the conservation identity
+    # offered = submitted + shed_final holds with submitted = finished +
+    # in_flight (each logical request is counted in exactly one bucket)
+    resubmissions: int = 0
+    shed_readmitted: int = 0
     finish_log: list = dataclasses.field(default_factory=list)
     # shard-mode scatter-gather counters (all zero with sharding disabled)
     shard_scatters: int = 0  # sub-stages split across shards
@@ -233,6 +248,11 @@ class Metrics:
     @property
     def shed(self) -> int:
         return self.shed_queue_full + self.shed_infeasible
+
+    @property
+    def shed_final(self) -> int:
+        """Logical requests shed and never successfully re-admitted."""
+        return self.shed - self.shed_readmitted
 
     # ------------------------------------------------------ windowed rates
     def window_summary(self, start_us: float, end_us: float) -> dict:
@@ -317,6 +337,9 @@ class Metrics:
             "shed": self.shed,
             "shed_queue_full": self.shed_queue_full,
             "shed_infeasible": self.shed_infeasible,
+            "resubmissions": self.resubmissions,
+            "shed_readmitted": self.shed_readmitted,
+            "shed_final": self.shed_final,
             "gen_util": self.gen_busy_us / t,
             "num_ret_workers": int(per.size),
             "ret_util": float(util.mean()),
@@ -477,7 +500,8 @@ class WavefrontScheduler:
             self.num_ret_workers,
             heartbeat_interval_us=config.heartbeat_interval_us,
             suspect_after_us=config.suspect_after_us,
-            dead_after_us=config.dead_after_us)
+            dead_after_us=config.dead_after_us,
+            external_heartbeats=config.external_heartbeats)
         fault_plan = getattr(backend, "fault_plan", None)
         self.ft: Optional[_FaultState] = None
         if config.fault_tolerance or fault_plan is not None:
@@ -497,9 +521,14 @@ class WavefrontScheduler:
 
             self.telemetry = TelemetrySampler(
                 interval_us=config.telemetry_interval_us)
-        # arrival queue: heap keyed (arrival_us, request_id) — O(log n)
-        # admission instead of the old sort-on-every-insert list
+        # arrival queue: heap keyed (arrival_us, ingress_seq) — O(log n)
+        # admission instead of the old sort-on-every-insert list.  The
+        # monotonic admission sequence number breaks exact-arrival ties in
+        # *submission* order: request ids are allocated before admission, so
+        # tying on request_id would let concurrent wall-clock submits replay
+        # in a different order than they ran
         self._pending: list[tuple[float, int, RequestContext]] = []
+        self._ingress_seq = 0
         self.active: list[RequestContext] = []
         self.done: list[RequestContext] = []
         self._cluster_sizes = index.cluster_sizes()
@@ -525,7 +554,8 @@ class WavefrontScheduler:
     # ------------------------------------------------------------------ API
     @property
     def pending(self) -> list[RequestContext]:
-        """Queued (not yet admitted-to-active) requests in arrival order."""
+        """Queued (not yet admitted-to-active) requests in arrival order
+        (submission order at exact arrival ties)."""
         return [item[2] for item in sorted(self._pending, key=lambda x: x[:2])]
 
     @handoff("server")
@@ -533,27 +563,45 @@ class WavefrontScheduler:
         """Queue a request for admission at its arrival time.  Returns False
         when the admission layer sheds it (bounded queue / infeasible
         deadline) — only possible when a SchedulerConfig admission knob is
-        enabled; the default configuration admits unconditionally."""
+        enabled; the default configuration admits unconditionally.
+
+        A request carrying the ``_shed`` state marker is a *re-admission
+        attempt* of a previously shed logical request (the ingress loop's
+        closed-loop retry): it bumps ``resubmissions`` instead of
+        re-counting ``shed_*`` on failure, and bumps ``shed_readmitted``
+        when it finally lands, so each logical request is counted in
+        exactly one of {submitted, shed_final}."""
+        resubmit = "_shed" in req.state
+        if resubmit:
+            self.metrics.resubmissions += 1
         if self.admission is not None:
             in_system = len(self._pending) + len(self.active)
             dec = self.admission.evaluate(req, self.now, in_system,
                                           active=self.active)
             if not dec.admitted:
-                if dec.reason == "queue_full":
-                    self.metrics.shed_queue_full += 1
-                else:
-                    self.metrics.shed_infeasible += 1
+                if not resubmit:
+                    # first shed of this logical request: count it and fire
+                    # the obs hooks exactly once
+                    if dec.reason == "queue_full":
+                        self.metrics.shed_queue_full += 1
+                    else:
+                        self.metrics.shed_infeasible += 1
+                    if self.obs is not None:
+                        self.obs.request_shed(req, self.now, dec.reason)
+                    if self.telemetry is not None:
+                        self.telemetry.on_shed(req, dec.reason)
                 req.state["_shed"] = dec.reason
-                if self.obs is not None:
-                    self.obs.request_shed(req, self.now, dec.reason)
-                if self.telemetry is not None:
-                    self.telemetry.on_shed(req, dec.reason)
                 return False
+        if resubmit:
+            del req.state["_shed"]
+            self.metrics.shed_readmitted += 1
         self.metrics.submitted += 1
         if self.obs is not None:
             self.obs.request_submitted(req, self.now)
+        req.ingress_seq = self._ingress_seq
+        self._ingress_seq += 1
         heapq.heappush(self._pending,
-                       (float(req.arrival_us), req.request_id, req))
+                       (float(req.arrival_us), req.ingress_seq, req))
         return True
 
     # ------------------------------------------------- worker pool lifecycle
@@ -581,6 +629,27 @@ class WavefrontScheduler:
     def rebind_worker(self, wid: int) -> bool:
         """Return a drained worker to the pool (JOINING -> HEALTHY)."""
         return self.lifecycle.rebind(int(wid), self.now)
+
+    @handoff("server")
+    def worker_heartbeat(self, wid: int, now: float) -> None:
+        """External (ingress-fed) heartbeat for ``wid`` stamped ``now`` on
+        the virtual clock.  The registry clamps: a stamp behind the last
+        one recorded never regresses ``last_heartbeat_us``.  Only
+        meaningful with ``external_heartbeats`` on — the default virtual
+        model keeps live workers fresh without any feed."""
+        self.lifecycle.heartbeat(int(wid), float(now))
+
+    @handoff("server")
+    def admission_load(self) -> dict:
+        """Backlog snapshot for the ingress re-admission gate: in-system
+        population, the bounded-queue limit (0 = unbounded), and the
+        admission controller's in-flight backlog estimate (µs)."""
+        out = {"in_system": len(self._pending) + len(self.active),
+               "max_pending": int(self.cfg.max_pending),
+               "backlog_us": 0.0}
+        if self.admission is not None:
+            out["backlog_us"] = float(self.admission.backlog_us(self.active))
+        return out
 
     # -------------------------------------------------------------- helpers
     def _enter_stage(self, req: RequestContext, now: float) -> None:
@@ -1816,13 +1885,13 @@ class WavefrontScheduler:
         # admit arrivals (probe orders batched across the whole cycle)
         admitted = []
         while self._pending and self._pending[0][0] <= now:
-            key_t, rid, req = heapq.heappop(self._pending)
+            key_t, seq, req = heapq.heappop(self._pending)
             if req.arrival_us != key_t:
                 # the request was re-dated after queuing (e.g. journal
                 # recovery deferring re-admission); lazily re-key with the
                 # live arrival instead of admitting at the stale stamp
                 heapq.heappush(self._pending,
-                               (float(req.arrival_us), rid, req))
+                               (float(req.arrival_us), seq, req))
                 continue
             self.active.append(req)
             admitted.append(req)

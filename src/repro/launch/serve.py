@@ -48,6 +48,27 @@ def main() -> None:
                     help="fraction of the pool crashed by the fault plan")
     ap.add_argument("--fault-transient-prob", type=float, default=0.05,
                     help="per-dispatch transient failure probability")
+    ap.add_argument("--wallclock", action="store_true",
+                    help="serve through the threaded wall-clock ingress "
+                         "(serving/ingress.py) instead of the batch path; "
+                         "arrivals are real producer-thread timestamps")
+    ap.add_argument("--speedup", type=float, default=200.0,
+                    help="wall->virtual clock compression for --wallclock "
+                         "(1 wall ms = speedup virtual ms)")
+    ap.add_argument("--closed-loop", type=int, default=0, metavar="CLIENTS",
+                    help="with --wallclock: closed-loop load generation with "
+                         "this many client threads (submit, wait, think, "
+                         "repeat) instead of an open-loop stream")
+    ap.add_argument("--replay-check", action="store_true",
+                    help="with --wallclock: record the measured backend "
+                         "charges on a DurationTape alongside the arrival "
+                         "trace, replay both on a fresh server stack over "
+                         "the pure virtual clock, and assert bit-identical "
+                         "per-request event fingerprints (the determinism "
+                         "oracle, extended to the measured RealBackend)")
+    ap.add_argument("--arrivals-out", metavar="PATH", default=None,
+                    help="with --wallclock: write the recorded "
+                         "arrival/heartbeat trace JSON here")
     ap.add_argument("--trace-out", metavar="PATH", default=None,
                     help="record spans and write a Chrome trace-event / "
                          "Perfetto JSON timeline here (implies tracing=True)")
@@ -58,27 +79,8 @@ def main() -> None:
     args = ap.parse_args()
 
     docs, _, topics = make_corpus(CorpusConfig(n_docs=8000, dim=48, n_topics=64))
-    index = IVFIndex.build(docs, n_clusters=32, iters=4)
-    embedder = SyntheticEmbedder(topics)
-    hybrid = HybridRetrievalEngine(index, cache_capacity=8, kernel_impl="ref")
-
     cfg = get_config(args.arch).reduced()
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    engine = GenerationEngine(cfg, params, max_batch=8, max_len=160, eos_id=0)
-    backend = RealBackend(engine, index, embedder, hybrid=hybrid)
-
-    pending = [f"query {i}" for i in range(args.n_requests)]
-    orig = backend.gen_duration
-
-    def gen_duration(n_prefill_tokens, batch, n_steps):
-        while engine.can_admit() and pending:
-            p = pending.pop(0)
-            toks = (np.frombuffer(p.encode(), np.uint8).astype(np.int32)
-                    % (cfg.vocab_size - 2)) + 1
-            engine.add_sequence(toks, max_new=args.max_new)
-        return orig(n_prefill_tokens, batch, n_steps)
-
-    backend.gen_duration = gen_duration
     fault_plan = None
     if args.fault_seed is not None:
         from repro.serving.faults import FaultPlan
@@ -89,18 +91,87 @@ def main() -> None:
             crash_frac=args.fault_crash_frac,
             transient_prob=args.fault_transient_prob)
         print(f"fault plan: {fault_plan.describe()}")
-    server = Server(index, embedder, mode="hedra", backend=backend, nprobe=8,
-                    num_ret_workers=args.ret_workers,
-                    dispatch_policy=args.dispatch,
-                    index_sharding=args.index_sharding,
-                    fault_plan=fault_plan,
-                    tracing=args.trace_out is not None,
-                    telemetry=args.metrics_out is not None)
-    for i in range(args.n_requests):
-        server.add_request(f"query {i}", workflows.build(args.workflow),
-                           arrival_us=i * 20_000.0)
+
+    def build_server() -> Server:
+        # rebuilt from scratch for each serving pass (the replay oracle
+        # needs a fresh, bit-identical stack: engine KV state and the
+        # hybrid cache are mutated by a run)
+        index = IVFIndex.build(docs, n_clusters=32, iters=4)
+        embedder = SyntheticEmbedder(topics)
+        hybrid = HybridRetrievalEngine(index, cache_capacity=8,
+                                       kernel_impl="ref")
+        engine = GenerationEngine(cfg, params, max_batch=8, max_len=160,
+                                  eos_id=0)
+        backend = RealBackend(engine, index, embedder, hybrid=hybrid)
+        pending = [f"query {i}" for i in range(args.n_requests)]
+        orig = backend.gen_duration
+
+        def gen_duration(n_prefill_tokens, batch, n_steps):
+            while engine.can_admit() and pending:
+                p = pending.pop(0)
+                toks = (np.frombuffer(p.encode(), np.uint8).astype(np.int32)
+                        % (cfg.vocab_size - 2)) + 1
+                engine.add_sequence(toks, max_new=args.max_new)
+            return orig(n_prefill_tokens, batch, n_steps)
+
+        backend.gen_duration = gen_duration
+        return Server(index, embedder, mode="hedra", backend=backend,
+                      nprobe=8,
+                      num_ret_workers=args.ret_workers,
+                      dispatch_policy=args.dispatch,
+                      index_sharding=args.index_sharding,
+                      fault_plan=fault_plan,
+                      external_heartbeats=args.wallclock,
+                      fault_tolerance=args.wallclock,
+                      tracing=args.trace_out is not None,
+                      telemetry=args.metrics_out is not None)
+
+    server = build_server()
     t0 = time.perf_counter()
-    m = server.run()
+    if args.wallclock:
+        from repro.serving import ingress
+        from repro.serving.workload import ClosedLoopSpec, MixSpec
+
+        tape = None
+        if args.replay_check:
+            # RealBackend charges *measured* durations (the sanctioned
+            # wall-clock boundary in core/backends.py), so the arrival
+            # trace alone cannot reproduce its timeline — record the
+            # charges too and replay them verbatim into the replica
+            tape = ingress.DurationTape()
+            ingress.tape_backend(server.backend, tape, mode="record")
+        if args.closed_loop > 0:
+            spec = ClosedLoopSpec(
+                name=args.workflow,
+                weights={args.workflow: 1.0},
+                num_clients=args.closed_loop,
+                requests_per_client=max(
+                    1, args.n_requests // args.closed_loop))
+            m, trace = server.serve_wallclock(closed_loop=spec,
+                                              speedup=args.speedup)
+        else:
+            mix = MixSpec(args.workflow, weights={args.workflow: 1.0})
+            stream = mix.sample(args.n_requests, rate_per_s=50.0)
+            m, trace = server.serve_wallclock(stream, speedup=args.speedup)
+        print(f"ingress trace: {len(trace.rows)} rows")
+        if args.arrivals_out:
+            trace.save(args.arrivals_out)
+            print(f"arrival trace written to {args.arrivals_out}")
+        if args.replay_check:
+            replica = build_server()
+            ingress.tape_backend(replica.backend, tape, mode="replay")
+            ingress.replay_trace(replica, trace)
+            if replica.fingerprints() != server.fingerprints():
+                raise SystemExit("replay-check FAILED: virtual-clock replay "
+                                 "diverged from the wall-clock run")
+            print(f"replay-check ok: virtual-clock replay is bit-identical "
+                  f"({len(tape.rows)} taped backend charges, "
+                  f"{tape.remaining()} unconsumed)")
+    else:
+        for i in range(args.n_requests):
+            server.add_request(f"query {i}", workflows.build(args.workflow),
+                               arrival_us=i * 20_000.0)
+        m = server.run()
     print(f"served {m.finished} requests in {time.perf_counter()-t0:.2f}s wall")
     for k, v in m.summary().items():
         print(f"  {k:24s} {v}")

@@ -335,6 +335,19 @@ class TelemetrySampler:
             "repro_scheduler_counter",
             "Metrics dataclass counters folded at end of run",
             labelnames=("name",))
+        # wall-clock ingress track (serving/ingress.py): the loop hands the
+        # wall/virtual clock values in as arguments — obs never reads time
+        self.wall_samples: list[dict] = []
+        self.m_ingress_rows = r.counter(
+            "repro_ingress_rows_total",
+            "ingress trace rows applied by kind",
+            labelnames=("kind",))
+        self.m_ingress_depth = r.gauge(
+            "repro_ingress_queue_depth",
+            "producer->scheduler queue occupancy at last wall sample")
+        self.m_clock_drift = r.gauge(
+            "repro_ingress_clock_drift_us",
+            "wall clock minus event clock at last wall sample (virtual us)")
 
     # ----------------------------------------------------------- event hooks
     @handoff("scheduler")
@@ -364,6 +377,27 @@ class TelemetrySampler:
     @handoff("scheduler")
     def on_gen_job(self, job) -> None:
         self.m_gen_jobs.inc()
+
+    @handoff("server")
+    def on_ingress_row(self, kind: str) -> None:
+        """One ingress trace row applied (arrival/heartbeat/readmit/tick)."""
+        self.m_ingress_rows.inc(kind=str(kind))
+
+    @handoff("server")
+    def on_wall_sample(self, *, wall_us: float, virtual_us: float,
+                       queue_depth: int, parked: int) -> None:
+        """Periodic wall-clock tap from the ingress loop.  Passive and
+        unrecorded: replayed runs simply have an empty wall track; the
+        fingerprint contract is unaffected."""
+        self.m_ingress_depth.set(float(queue_depth))
+        self.m_clock_drift.set(float(wall_us) - float(virtual_us))
+        self.wall_samples.append({
+            "wall_us": float(wall_us),
+            "virtual_us": float(virtual_us),
+            "drift_us": float(wall_us) - float(virtual_us),
+            "queue_depth": int(queue_depth),
+            "parked": int(parked),
+        })
 
     # ------------------------------------------------------------- sampling
     @handoff("scheduler")
@@ -415,4 +449,5 @@ class TelemetrySampler:
         snap = self.registry.snapshot()
         snap["interval_us"] = self.interval_us
         snap["timeline"] = list(self.samples)
+        snap["wall_timeline"] = list(self.wall_samples)
         return snap

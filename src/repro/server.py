@@ -157,9 +157,84 @@ class Server:
             return None
         return req.request_id
 
+    def build_request(self, input_text: str, graph: Union[RAGraph, str],
+                      arrival_us: float) -> RequestContext:
+        """Build (but do not submit) a request.  The ingress loop builds
+        once and resubmits the *same* context across re-admission attempts,
+        which preserves its id-keyed workload draws (iterations, SLO)."""
+        if isinstance(graph, str):
+            from repro import workflows
+
+            graph = workflows.build(graph)
+        return self._build_request(input_text, graph, float(arrival_us))
+
+    def submit_built(self, req: RequestContext) -> Optional[int]:
+        """Submit a ``build_request`` context at its stamped arrival (same
+        stale-arrival contract as ``submit``).  Returns the id, or ``None``
+        when an admission knob sheds it."""
+        if req.arrival_us < self.sched.now:
+            raise ValueError(
+                f"arrival_us={req.arrival_us} is in the past (event clock "
+                f"at {self.sched.now}); submissions must be arrival-ordered")
+        if not self.sched.add_request(req):
+            return None
+        return req.request_id
+
+    def readmit_request(self, req: RequestContext,
+                        arrival_us: Optional[float] = None) -> Optional[int]:
+        """Re-admission attempt for a previously shed request (closed-loop
+        ingress path): the request is re-stamped to the later of
+        ``arrival_us`` and the event clock — its latency/SLO window restarts
+        at re-admission — and re-offered.  Counted as a resubmission, never
+        as a second shed/submit of the same logical request; the journal
+        sees the context at most once because shed requests never enter
+        done/active/pending.  Returns the id, or ``None`` while the
+        admission layer still refuses it."""
+        base = self.sched.now if arrival_us is None else float(arrival_us)
+        req.arrival_us = max(base, self.sched.now)
+        if not self.sched.add_request(req):
+            return None
+        return req.request_id
+
+    def heartbeat_worker(self, wid: int, now_us: float) -> None:
+        """Feed an external heartbeat for ``wid`` (wall-clock ingress path;
+        see SchedulerConfig.external_heartbeats)."""
+        self.sched.worker_heartbeat(wid, now_us)
+
+    def admission_load(self) -> dict:
+        """In-system population / queue bound / backlog estimate — the
+        signal the ingress loop's re-admission gate polls."""
+        return self.sched.admission_load()
+
     def step(self, until_us: float) -> Metrics:
         """Advance the serving clock to ``until_us`` (streaming)."""
         return self.sched.step(until_us)
+
+    def fingerprints(self) -> dict:
+        """Per-request event fingerprints of every finished request: the
+        bit-identity contract between a wall-clock ingress run and its
+        virtual-clock replay (and between streaming and batch paths)."""
+        return {r.request_id: [(float(t), e, repr(p)) for t, e, p in r.events]
+                for r in self.sched.done}
+
+    def serve_wallclock(self, stream: Optional[Iterable] = None, *,
+                        closed_loop=None, speedup: float = 1.0,
+                        max_wall_s: float = 120.0, **kw):
+        """Threaded wall-clock serve (serving/ingress.py): producer threads
+        timestamp real arrivals into the ingress queue while this thread
+        drains it into the scheduler.  Returns ``(Metrics, ArrivalTrace)``;
+        the trace replays through ``serving.ingress.replay_trace`` to
+        bit-identical per-request event fingerprints."""
+        from repro.serving import ingress
+
+        if (stream is None) == (closed_loop is None):
+            raise ValueError("pass exactly one of stream / closed_loop")
+        if closed_loop is not None:
+            return ingress.closed_loop_serve(
+                self, closed_loop, speedup=speedup, max_wall_s=max_wall_s,
+                **kw)
+        return ingress.serve_wallclock(
+            self, stream, speedup=speedup, max_wall_s=max_wall_s, **kw)
 
     def serve(self, stream: Iterable, max_time_us: float = 4e9) -> Metrics:
         """Open-loop streaming serve: walk an arrival-ordered ``stream`` of

@@ -69,12 +69,22 @@ class WorkerRegistry:
     def __init__(self, num_workers: int, *,
                  heartbeat_interval_us: float = 50_000.0,
                  suspect_after_us: float = 150_000.0,
-                 dead_after_us: float = 400_000.0):
+                 dead_after_us: float = 400_000.0,
+                 external_heartbeats: bool = False):
         self.heartbeat_interval_us = float(heartbeat_interval_us)
         self.suspect_after_us = float(suspect_after_us)
         self.dead_after_us = float(dead_after_us)
+        # external mode (wall-clock ingress): heartbeats come only from
+        # explicit heartbeat() calls — the stored stamp is the truth and
+        # real gaps drive SUSPECT/DEAD.  With a FaultPlan armed the plan
+        # model stays authoritative either way, so chaos runs replay on the
+        # virtual clock unchanged.
+        self.external_heartbeats = bool(external_heartbeats)
         self.workers: dict[int, WorkerHealth] = {}
         self._n_not_healthy = 0
+        # high-water mark of tick timestamps: wall-clock callers must never
+        # run the gap math with a `now` behind one already processed
+        self._last_tick_us = 0.0
         for _ in range(max(0, int(num_workers))):
             self.register(0.0)
 
@@ -143,6 +153,11 @@ class WorkerRegistry:
         return wid
 
     def heartbeat(self, wid: int, now: float) -> None:
+        """Record a heartbeat stamped ``now``.  Wall-clock feeds must stamp
+        with ``time.monotonic``-derived values (serving/ingress.py
+        WallClock); the clamp below additionally guarantees that even a
+        non-monotonic stamp can never regress ``last_heartbeat_us`` — a
+        backward clock jump must not mark every worker SUSPECT at once."""
         w = self.workers[int(wid)]
         if w.state == DEAD:
             return  # fenced: a late heartbeat cannot resurrect a dead worker
@@ -175,7 +190,8 @@ class WorkerRegistry:
         """Virtual heartbeat model: a live worker's heartbeat is always
         fresh; a crash freezes it at the crash instant; a severe stall
         window freezes it at the window start (resuming when the window
-        ends)."""
+        ends).  In external mode (no plan) the stored stamp — fed by
+        ``heartbeat()`` from the wall-clock ingress — is the truth."""
         hb = float(now)
         if plan is not None:
             c = plan.crash_at(w.wid)
@@ -185,6 +201,8 @@ class WorkerRegistry:
                 ps = plan.heartbeat_pause_start(w.wid, now)
                 if ps is not None:
                     hb = min(hb, float(ps))
+        elif self.external_heartbeats:
+            hb = w.last_heartbeat_us
         return max(hb, w.registered_us)
 
     def tick(self, now: float, plan=None) -> list:
@@ -192,7 +210,14 @@ class WorkerRegistry:
         ``[(wid, old_state, new_state), ...]`` for every change.  The list
         is canonically wid-ordered — the scheduler's recovery path and the
         obs transition hooks consume it in order, so the order must come
-        from the worker ids, not from registration history."""
+        from the worker ids, not from registration history.
+
+        Non-monotonic guard: ``now`` is clamped to the high-water mark of
+        previous ticks, so a regressed timestamp (rebased wall clock,
+        out-of-order drain) can neither compute negative gaps nor regress
+        any ``last_heartbeat_us`` already recorded."""
+        now = max(float(now), self._last_tick_us)
+        self._last_tick_us = now
         out = []
         for w in sorted(self.workers.values(), key=lambda x: x.wid):
             if w.state == DEAD:

@@ -141,6 +141,73 @@ class MixSpec:
                                    slo_class_us=dict(self.slo_tiers_us))
 
 
+# ---------------------------------------------------------------------------
+# Closed-loop load generation (wall-clock serving front-end)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ClientDraw:
+    """One submission of a closed-loop client's plan: what to send, how long
+    to think after the answer, and the token charge against the shared
+    budget (est_tokens ~ prompt + expected generation)."""
+    workflow: str
+    text: str
+    think_s: float
+    est_tokens: int
+
+
+@dataclasses.dataclass
+class ClosedLoopSpec:
+    """Closed-loop workload: ``num_clients`` clients each submit, wait for
+    the finish, think, and repeat — the serving-system complement to the
+    open-loop Poisson stream (offered load adapts to service rate instead
+    of being fixed).  ``token_budget`` caps the *total* tokens the client
+    population may charge (0 = unlimited), the standard way to bound a
+    closed-loop run's length.
+
+    ``plan(client_id)`` is a deterministic per-client draw sequence
+    (seeded by (seed, client_id)); the *arrival instants* are wall-clock
+    and recorded by the ingress trace — everything else about the
+    workload replays from the plan.
+    """
+
+    name: str = "closed"
+    # workflow name -> relative weight (same convention as MixSpec)
+    weights: dict = dataclasses.field(default_factory=dict)
+    num_clients: int = 4
+    requests_per_client: int = 8
+    think_time_s: float = 0.05  # mean of an exponential think time
+    est_tokens_mean: float = 160.0  # per-request charge against the budget
+    token_budget: int = 0  # total tokens across all clients; 0 = unlimited
+    seed: int = 29
+
+    @classmethod
+    def from_mix(cls, mix: "MixSpec", **kw) -> "ClosedLoopSpec":
+        """Closed-loop spec over a named mix's workflow weights."""
+        kw.setdefault("seed", mix.seed)
+        return cls(name=mix.name, weights=dict(mix.weights), **kw)
+
+    def plan(self, client_id: int) -> list[ClientDraw]:
+        """The full deterministic draw sequence of one client."""
+        if not self.weights:
+            raise ValueError(f"ClosedLoopSpec {self.name!r} has no weights")
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, int(client_id)]))
+        names = sorted(self.weights)
+        w = np.asarray([self.weights[c] for c in names], np.float64)
+        n = int(self.requests_per_client)
+        picks = rng.choice(len(names), size=n, p=w / w.sum())
+        thinks = rng.exponential(max(self.think_time_s, 1e-9), size=n)
+        toks = rng.lognormal(np.log(max(self.est_tokens_mean, 1.0)), 0.4,
+                             size=n)
+        return [ClientDraw(workflow=names[int(picks[i])],
+                           text=f"c{int(client_id)}q{i}",
+                           think_s=float(thinks[i]),
+                           est_tokens=int(max(1, toks[i])))
+                for i in range(n)]
+
+
 # Named mixes used by benchmarks/bench_serving.py and the examples.  Tier
 # values follow the interactive-vs-batch contrast: one-shot/HyDE answer a
 # user waiting at a prompt, multi-hop pipelines tolerate seconds.

@@ -1,0 +1,41 @@
+"""Planted: the wall-clock ingress policy boundary.  Serving code outside
+serving/ingress.py must not read real time (determinism/wall-clock), and
+the scheduler thread must cross into producer-owned queue state only via
+declared @handoff points — a direct write or a non-handoff call past the
+handle is an ownership violation."""
+import time
+
+from repro.core.ownership import handoff, owned_by
+
+
+@owned_by("ingress")
+class Queue:
+    def __init__(self):
+        self.items = []
+        self.closed = False
+
+    @handoff("server")
+    def drain(self):
+        out, self.items = self.items, []
+        return out
+
+    def internal_compact(self):
+        return len(self.items)
+
+
+@owned_by("server")
+class Loop:
+    def __init__(self):
+        self.queue = Queue()
+
+    def stamp(self):
+        return time.monotonic()  # PLANTED: wall read outside ingress.py
+
+    def bad_write(self):
+        self.queue.closed = True  # PLANTED: write past the producer handle
+
+    def bad_call(self):
+        return self.queue.internal_compact()  # PLANTED: not a handoff
+
+    def fine(self):
+        return self.queue.drain()  # ok: declared @handoff("server")

@@ -1,0 +1,12 @@
+"""Negative: this path *is* the sanctioned wall-clock boundary
+(policy.wallclock_ingress_paths) — producer-side stamping reads real time
+here by design and must stay silent, with no inline suppressions."""
+import time
+
+
+class Stamper:
+    def __init__(self):
+        self.t0 = time.monotonic()  # ok: inside the ingress carve-out
+
+    def now_us(self):
+        return (time.monotonic() - self.t0) * 1e6  # ok: same carve-out

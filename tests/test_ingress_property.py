@@ -1,0 +1,103 @@
+"""Property suite for the wall-clock ingress replay oracle: random mixes,
+rates, speedups, front-end shapes (open-loop stream vs closed-loop
+clients) and optional chaos plans — every threaded run's recorded trace
+must replay on the pure virtual clock to bit-identical per-request event
+fingerprints, with counter conservation holding on both sides.
+
+Runs under hypothesis when installed (CI installs it explicitly);
+otherwise falls back to a fixed seeded sweep of the same properties so
+the suite never silently skips."""
+import numpy as np
+import pytest
+
+from repro.server import Server
+from repro.serving.faults import FaultPlan
+from repro.serving.ingress import ArrivalTrace, replay_trace
+from repro.serving.workload import MIXES, ClosedLoopSpec
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # local envs without hypothesis: seeded sweep instead
+    HAVE_HYPOTHESIS = False
+
+FALLBACK_SEEDS = list(range(8))
+MIX_NAMES = ["heterogeneous", "balanced", "interactive-heavy",
+             "pure-oneshot"]
+
+
+def _property(n_examples):
+    if HAVE_HYPOTHESIS:
+        return lambda fn: settings(
+            max_examples=n_examples, deadline=None,
+            suppress_health_check=[HealthCheck.too_slow],
+        )(given(seed=st.integers(0, 2**32 - 1))(fn))
+    return lambda fn: pytest.mark.parametrize(
+        "seed", FALLBACK_SEEDS[:n_examples])(fn)
+
+
+def _wall_run(index, emb, seed):
+    """One randomized threaded serve.  Returns (server, metrics, trace,
+    server_factory)."""
+    rng = np.random.default_rng(seed)
+    mix = MIXES[MIX_NAMES[int(rng.integers(0, len(MIX_NAMES)))]]
+    nw = int(rng.integers(1, 4))
+    chaos = bool(rng.integers(0, 2))
+    external_hb = bool(rng.integers(0, 2))
+    speedup = float(rng.uniform(400.0, 2000.0))
+    plan_seed = int(rng.integers(0, 2**31))
+
+    def mk():
+        plan = None
+        if chaos:
+            plan = FaultPlan.random(plan_seed, nw, 800_000.0,
+                                    crash_frac=0.3, stall_rate=1e-6,
+                                    transient_prob=0.05)
+        return Server(index, emb, mode="hedra", nprobe=8,
+                      workload=mix.profile(), num_ret_workers=nw,
+                      fault_plan=plan,
+                      external_heartbeats=external_hb,
+                      fault_tolerance=external_hb or chaos)
+
+    s = mk()
+    if rng.integers(0, 2):  # closed loop
+        spec = ClosedLoopSpec.from_mix(
+            mix, num_clients=int(rng.integers(1, 4)),
+            requests_per_client=int(rng.integers(2, 5)),
+            think_time_s=float(rng.uniform(0.005, 0.03)),
+            seed=int(rng.integers(0, 2**31)))
+        m, trace = s.serve_wallclock(closed_loop=spec, speedup=speedup,
+                                     max_wall_s=90.0)
+    else:
+        stream = mix.sample(int(rng.integers(4, 13)),
+                            rate_per_s=float(rng.uniform(50.0, 400.0)),
+                            seed=int(rng.integers(0, 2**31)))
+        m, trace = s.serve_wallclock(stream, speedup=speedup,
+                                     max_wall_s=90.0)
+    return s, m, trace, mk
+
+
+@_property(6)
+def test_record_replay_fingerprint_identity(small_index, embedder, seed):
+    s1, m1, trace, mk = _wall_run(small_index, embedder, seed)
+    # liveness: every admitted request ended finished; conservation holds
+    assert m1.submitted == m1.finished
+    n_arrivals = sum(1 for r in trace.rows if r.kind == "arrival")
+    assert m1.submitted + m1.shed_final == n_arrivals
+    # the oracle: replay the trace on a fresh server over the virtual clock
+    s2 = mk()
+    m2 = replay_trace(s2, trace)
+    assert s2.fingerprints() == s1.fingerprints()
+    assert m2.summary() == m1.summary()
+
+
+@_property(3)
+def test_replay_survives_json_round_trip(small_index, embedder, seed):
+    s1, _m1, trace, mk = _wall_run(small_index, embedder, seed)
+    rt = ArrivalTrace.from_dict(trace.to_dict())
+    assert [r.__dict__ for r in rt.rows] == [r.__dict__ for r in trace.rows]
+    s2 = mk()
+    replay_trace(s2, rt)
+    assert s2.fingerprints() == s1.fingerprints()

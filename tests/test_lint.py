@@ -53,6 +53,9 @@ EXPECTED = {
     ("repro/core/wavefront.py", "hooks/unguarded-hook"): 1,
     ("repro/core/owned.py", "ownership/cross-domain-write"): 1,
     ("repro/core/owned.py", "ownership/cross-domain-call"): 1,
+    ("repro/serving/bad_ingress.py", "determinism/wall-clock"): 1,
+    ("repro/serving/bad_ingress.py", "ownership/cross-domain-write"): 1,
+    ("repro/serving/bad_ingress.py", "ownership/cross-domain-call"): 1,
 }
 
 
@@ -64,7 +67,8 @@ def test_exact_fixture_finding_counts(fixture_report):
 
 
 def test_negative_files_stay_silent(fixture_report):
-    silent = ("repro/core/stages.py", "repro/util/ok_clock.py")
+    silent = ("repro/core/stages.py", "repro/util/ok_clock.py",
+              "repro/serving/ingress.py")
     assert not [f for f in fixture_report.findings if f.path in silent]
 
 
